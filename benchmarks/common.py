@@ -1,0 +1,78 @@
+"""Shared benchmark utilities: timing, calibration data, CSV emit."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQConfig, fit_lobcq
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out  # µs
+
+
+def llm_like_operand(key, shape, outlier_p=0.005, outlier_scale=25.0):
+    """Gaussian bulk + rare large outliers — LLM activation statistics."""
+    x = jax.random.normal(key, shape)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), outlier_p, shape)
+    return jnp.where(mask, x * outlier_scale, x)
+
+
+def weight_like_operand(key, shape):
+    return jax.random.normal(key, shape) * 0.02
+
+
+_CB_CACHE = {}
+
+
+def codebooks_for(cfg: BCQConfig, seed=0, iters=12, data=None):
+    kk = (cfg, seed, data is None)
+    if kk in _CB_CACHE and data is None:
+        return _CB_CACHE[kk]
+    if data is None:
+        data = llm_like_operand(jax.random.PRNGKey(seed), (1 << 19,))
+    cbs = fit_lobcq(data, cfg, key=jax.random.PRNGKey(seed), iters=iters, max_blocks=16384)
+    if data is None:
+        _CB_CACHE[kk] = cbs
+    return cbs
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+_MODEL_CACHE = {}
+
+
+def trained_tiny(steps: int = 200):
+    """Train the GPT3-126M-family smoke model once per process; benches
+    share it (Table 2 PPL, Table 9 universality on real operands)."""
+    if "m" in _MODEL_CACHE:
+        return _MODEL_CACHE["m"]
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_smoke
+    from repro.data.pipeline import DataConfig, batch_at
+    from repro.launch.train import make_train_step
+    from repro.models import zoo
+    from repro.models.layers import Runtime
+    from repro.optim import adamw
+
+    cfg = get_smoke("gpt3_126m")
+    rt = Runtime(quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32)
+    api = zoo.build(cfg, rt)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=16)
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    step = jax.jit(make_train_step(api, adamw.AdamWConfig(lr=2e-3, warmup_steps=30, total_steps=steps)))
+    for s in range(steps):
+        params, opt, _ = step(params, opt, batch_at(dcfg, s))
+    _MODEL_CACHE["m"] = (cfg, rt, api, dcfg, params)
+    return _MODEL_CACHE["m"]

@@ -1,0 +1,44 @@
+"""§3 on-the-fly quantization cost: kernel + reference micro-benchmarks.
+
+CPU timings (interpret-mode Pallas is a correctness vehicle, not perf) —
+the derived column reports work sizes so TPU projections can be made from
+the roofline constants.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import codebooks_for, emit, llm_like_operand, timeit
+from repro.core import bcq
+from repro.core.bcq import BCQConfig
+from repro.kernels import ops
+
+
+def run(fast=False):
+    cfg = BCQConfig()
+    cb = codebooks_for(cfg).as_jnp()
+    m, k, n = 256, 4096, 1024
+    x = llm_like_operand(jax.random.PRNGKey(0), (m, k))
+    w = llm_like_operand(jax.random.PRNGKey(1), (n, k))
+
+    fq = jax.jit(lambda v: bcq.fake_quant(v, cb, cfg))
+    us, _ = timeit(fq, x)
+    emit("kernel_fake_quant_jnp", us, f"shape={m}x{k} {m*k/us:.0f} scalars/us")
+
+    qz = jax.jit(lambda v: ops.quantize(v, cb, cfg, impl="ref"))
+    us, pa = timeit(qz, x)
+    emit("kernel_quantize_ref", us, f"shape={m}x{k} packed_bits={cfg.bitwidth():.3f}")
+
+    pw = ops.quantize(w, cb, cfg, impl="ref")
+    mm = jax.jit(lambda a: ops.matmul(a, pw, cb, cfg, impl="ref"))
+    us, _ = timeit(mm, pa)
+    emit("kernel_w4a4_matmul_ref", us, f"{m}x{n}x{k} {2*m*n*k/us/1e6:.2f} GFLOP/s-cpu")
+
+    if not fast:
+        us, _ = timeit(
+            lambda: ops.quantize(x[:128, :2048], cb, cfg, impl="pallas", tile_m=64, tile_k=512),
+            warmup=1, iters=2,
+        )
+        emit("kernel_quantize_pallas_interp", us, "128x2048 interpret-mode (correctness vehicle)")
+    bf = jax.jit(lambda a, b: a @ b.T)
+    us, _ = timeit(bf, x, w)
+    emit("kernel_bf16_matmul_xla", us, f"{m}x{n}x{k} baseline")

@@ -1,0 +1,35 @@
+"""§Roofline: summarize the dry-run sweep JSONLs into the roofline table."""
+import json
+import os
+
+from benchmarks.common import emit
+
+FILES = [
+    "results/dryrun_single.jsonl",
+    "results/dryrun_multi.jsonl",
+    "results/dryrun_hillclimb.jsonl",
+]
+
+
+def run(fast=False):
+    seen = 0
+    for f in FILES:
+        if not os.path.exists(f):
+            continue
+        for line in open(f):
+            r = json.loads(line)
+            if r.get("status") == "skipped":
+                emit(f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0, "SKIP:" + r["reason"][:60])
+                continue
+            if r.get("status") != "ok":
+                emit(f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0, "FAIL:" + r.get("error", "")[:80])
+                continue
+            seen += 1
+            emit(
+                f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}",
+                float(r.get("compile_loop_s", 0)) * 1e6,
+                f"bottleneck={r.get('bottleneck')} tc={r.get('t_compute_s', 0):.2e}s "
+                f"tm={r.get('t_memory_s', 0):.2e}s tcoll={r.get('t_collective_s', 0):.2e}s "
+                f"useful={r.get('useful_flops_ratio', 0):.3f} mem={r.get('peak_mem_gib', 0):.1f}GiB",
+            )
+    emit("roofline_cells_ok", 0.0, f"{seen} compiled cells summarized")

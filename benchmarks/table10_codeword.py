@@ -1,0 +1,21 @@
+"""Table 10: codeword bitwidth INT4 vs INT6 vs INT8."""
+import dataclasses
+
+import jax
+
+from benchmarks.common import codebooks_for, emit, llm_like_operand
+from repro.core import bcq
+from repro.core.bcq import BCQConfig, quantization_nmse
+
+
+def run(fast=False):
+    x = llm_like_operand(jax.random.PRNGKey(9), (256, 4096))
+    res = {}
+    for bc in (4, 6, 8):
+        cfg = BCQConfig(block_len=8, array_len=128, n_codebooks=8, codeword_bits=bc)
+        cb = codebooks_for(cfg).as_jnp()
+        n = float(quantization_nmse(x, bcq.fake_quant(x, cb, cfg)))
+        res[bc] = n
+        emit(f"table10_INT{bc}", 0.0, f"nmse={n:.6f}")
+    ok = res[6] < res[4] and abs(res[6] - res[8]) < 0.35 * res[8] + 1e-9
+    emit("table10_trend", 0.0, f"INT6<<INT4={res[6] < 0.8*res[4]} INT6~INT8={abs(res[6]-res[8])/max(res[8],1e-12):.2%} (paper: INT6≈INT8, INT4 degrades)")

@@ -1,0 +1,24 @@
+"""Table 1: effective bitwidth of LO-BCQ configurations (Eq. 9)."""
+from benchmarks.common import emit
+from repro.core.bcq import BCQConfig
+
+# paper Table 1 (L_b=8 block) expected values
+EXPECTED = {
+    (8, 128, 2): 4.1875, (8, 128, 4): 4.3125, (8, 128, 8): 4.4375, (8, 128, 16): 4.5625,
+    (8, 64, 2): 4.25, (8, 64, 4): 4.375, (8, 64, 8): 4.5, (8, 64, 16): 4.625,
+    (8, 32, 2): 4.375, (8, 32, 4): 4.5, (8, 32, 8): 4.625, (8, 32, 16): 4.75,
+    (8, 16, 2): 4.625, (8, 16, 4): 4.75, (8, 16, 8): 4.875, (8, 16, 16): 5.0,
+    (4, 128, 2): 4.3125, (4, 128, 4): 4.5625, (4, 64, 2): 4.375, (4, 64, 4): 4.625,
+    (2, 128, 2): 4.5625, (2, 64, 2): 4.625,
+}
+
+
+def run(fast=False):
+    bad = 0
+    for (lb, la, nc), want in EXPECTED.items():
+        got = BCQConfig(block_len=lb, array_len=la, n_codebooks=nc).bitwidth()
+        ok = abs(got - want) < 1e-9
+        bad += not ok
+        emit(f"table1_Lb{lb}_g{la}_Nc{nc}", 0.0, f"bits={got:.4f} paper={want:.4f} {'OK' if ok else 'MISMATCH'}")
+    emit("table1_summary", 0.0, f"{len(EXPECTED)-bad}/{len(EXPECTED)} match paper Table 1")
+    assert bad == 0

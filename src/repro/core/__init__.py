@@ -1,0 +1,2 @@
+from repro.core.bcq import BCQConfig, CodebookSet, encode, decode, fake_quant, fit_lobcq  # noqa: F401
+from repro.core.calibrate import default_universal_codebooks  # noqa: F401

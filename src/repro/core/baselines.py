@@ -1,0 +1,102 @@
+"""Block-quantization baselines the paper compares against (§4.1, §A.5).
+
+All are fake-quant functions ``x -> x_q`` (same shape/dtype, values snapped
+to each scheme's representable grid), with blocks along the last axis:
+
+* MX4   (g16) — 16-elem blocks, E8M0 shared scale, E1M2 elements (the paper's
+  deliberately *optimistic* proxy for MX4), 4.5 bits.
+* MXFP4 (g32) — 32-elem blocks, E8M0 scale, E2M1 elements, 4.25 bits.
+* VSQ   (g16) — 16-elem vectors, INT4 elements, per-vector scale quantized to
+  UINT8 against a per-tensor scale (two-level), 4.5 bits.
+* INT4/INT8 per-tensor, EeMm per-tensor, Lloyd-Max per-tensor (Table 11).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.core.lloyd_max import lloyd_max_1d, quantile_init, quantize_to_levels
+from repro.core.bcq import pad_to_multiple
+
+
+def _blockwise(x: jax.Array, block: int):
+    xf = x.astype(jnp.float32)
+    xp, _ = pad_to_multiple(xf, block)
+    lead = xp.shape[:-1]
+    b = xp.reshape(*lead, xp.shape[-1] // block, block)
+    amax = jnp.max(jnp.abs(b), axis=-1, keepdims=True)
+    return xp, b, amax
+
+
+def _unblock(b: jax.Array, orig_last: int, dtype):
+    lead = b.shape[:-2]
+    out = b.reshape(*lead, b.shape[-2] * b.shape[-1])
+    return out[..., :orig_last].astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def mx_quantize(x: jax.Array, block: int = 16) -> jax.Array:
+    """MX4(g16): E8M0 block scale, E1M2 elements (paper's MX4 proxy)."""
+    _, b, amax = _blockwise(x, block)
+    fmt = formats.E1M2
+    s = jnp.where(amax > 0, amax / fmt.max_val, 1.0)
+    s = formats.E8M0.quantize(s)
+    s = jnp.where(s == 0, 2.0**-127, s)
+    q = fmt.quantize(b / s) * s
+    return _unblock(q, x.shape[-1], x.dtype)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def mxfp4_quantize(x: jax.Array, block: int = 32) -> jax.Array:
+    """MXFP4(g32): E8M0 block scale, E2M1 elements."""
+    _, b, amax = _blockwise(x, block)
+    fmt = formats.E2M1
+    s = jnp.where(amax > 0, amax / fmt.max_val, 1.0)
+    s = formats.E8M0.quantize(s)
+    s = jnp.where(s == 0, 2.0**-127, s)
+    q = fmt.quantize(b / s) * s
+    return _unblock(q, x.shape[-1], x.dtype)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def vsq_quantize(x: jax.Array, block: int = 16) -> jax.Array:
+    """VSQ(g16): INT4 elements, UINT8 two-level per-vector scales."""
+    xf = x.astype(jnp.float32)
+    _, b, amax = _blockwise(x, block)
+    tmax = jnp.max(jnp.abs(xf))
+    s_t = jnp.where(tmax > 0, tmax / formats.INT4.max_val, 1.0)
+    s_v = jnp.where(amax > 0, amax / formats.INT4.max_val, s_t)
+    u = s_v / s_t  # in (0, 1]
+    u_q = jnp.clip(jnp.round(u * 255.0), 1.0, 255.0) / 255.0
+    s = u_q * s_t
+    q = formats.INT4.quantize(b / s) * s
+    return _unblock(q, x.shape[-1], x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def int_pertensor(x: jax.Array, bits: int = 4) -> jax.Array:
+    return formats.quantize_tensor_scaled(x, formats.IntFormat(bits))
+
+
+def fp_pertensor(x: jax.Array, fmt: formats.FloatFormat) -> jax.Array:
+    return formats.quantize_tensor_scaled(x, fmt)
+
+
+def lloydmax_pertensor(x: jax.Array, bits: int = 4, iters: int = 60) -> jax.Array:
+    """MSE-optimal per-tensor scalar quantizer (paper §A.1 / Table 11)."""
+    flat = jnp.ravel(x).astype(jnp.float32)
+    levels = lloyd_max_1d(flat, quantile_init(flat, 2**bits), iters=iters)
+    return quantize_to_levels(x.astype(jnp.float32), levels).astype(x.dtype)
+
+
+# name -> (fn, effective bits/scalar) for the benchmark tables
+BASELINES = {
+    "MX4_g16": (mx_quantize, 4.5),
+    "MXFP4_g32": (mxfp4_quantize, 4.25),
+    "VSQ_g16": (vsq_quantize, 4.5),
+    "INT4_pt": (lambda x: int_pertensor(x, 4), 4.0),
+    "LloydMax4_pt": (lambda x: lloydmax_pertensor(x, 4), 4.0),
+}

@@ -1,0 +1,109 @@
+"""Universal-codebook calibration (paper §3).
+
+The paper calibrates a single set of ≤16 codebooks on one batch of GPT3-126M
+activations + weights and freezes it across every tensor, layer and model.
+Here:
+
+* ``collect_calibration_tensors`` runs a model forward with the zoo's
+  ``collect_gemm_inputs`` option and returns the captured GEMM input
+  activations (+ optionally the weights themselves).
+* ``calibrate_universal`` fits LO-BCQ codebooks on those samples.
+* ``default_universal_codebooks`` is the repo-shipped set: fitted on the
+  GPT3-126M-config model over the synthetic corpus, cached on disk under
+  ``src/repro/configs/codebooks/`` so every run (tests, examples, serving)
+  uses the same frozen books — mirroring the paper's deployment story.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bcq import BCQConfig, CodebookSet, fit_lobcq
+
+_CB_DIR = os.path.join(os.path.dirname(__file__), "..", "configs", "codebooks")
+
+
+def calibrate_universal(
+    samples: Sequence[jax.Array],
+    cfg: BCQConfig,
+    key: jax.Array | None = None,
+    **fit_kw,
+) -> CodebookSet:
+    return fit_lobcq(list(samples), cfg, key=key, **fit_kw)
+
+
+def _cache_path(cfg: BCQConfig) -> str:
+    return os.path.join(_CB_DIR, f"universal_{cfg.tag()}.json")
+
+
+def default_universal_codebooks(cfg: BCQConfig | None = None, regenerate: bool = False) -> CodebookSet:
+    """Frozen universal codebooks; generated once from a heavy-tailed mixture
+    matching LLM operand statistics + cached to disk.  `examples/quickstart.py`
+    regenerates them from real model activations."""
+    cfg = cfg or BCQConfig()
+    path = _cache_path(cfg)
+    if not regenerate and os.path.exists(path):
+        return CodebookSet.load(path)
+    os.makedirs(_CB_DIR, exist_ok=True)
+    key = jax.random.PRNGKey(1234)
+    ks = jax.random.split(key, 4)
+    # LLM weights ≈ gaussian; activations ≈ heavy-tailed with outliers.
+    gauss = jax.random.normal(ks[0], (1 << 18,))
+    lap = jax.random.laplace(ks[1], (1 << 18,)) * 0.7
+    t4 = jax.random.t(ks[2], 4.0, (1 << 18,)) * 0.5
+    out = jax.random.normal(ks[3], (1 << 16,)) * 8.0  # outlier channel
+    samples = [gauss, lap, t4, jnp.concatenate([gauss[: 1 << 16], out])]
+    cbs = calibrate_universal(samples, cfg, key=jax.random.PRNGKey(0))
+    cbs.save(path)
+    return cbs
+
+
+def save_as_default(cbs: CodebookSet) -> str:
+    os.makedirs(_CB_DIR, exist_ok=True)
+    path = _cache_path(cbs.cfg)
+    cbs.save(path)
+    return path
+
+
+def capture_gemm_inputs(params, tokens, cfg, rt, max_per_layer: int = 4096):
+    """Run a dense-family forward and capture every GEMM's input activations
+    (the paper calibrates on one batch of GPT3-126M activations, §4.1).
+
+    Returns a list of 1-D sample tensors: per-layer attention input (ln1
+    out), MLP input (ln2 out), plus the embedding output.
+    """
+    import jax.numpy as jnp
+
+    from repro.models import layers as L, transformer as T
+
+    b, s = tokens.shape
+    x = T.embed_tokens(params, tokens, rt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    cb = params.get("codebooks")
+    samples = [jnp.ravel(x)[:max_per_layer]]
+    n_layers = jax.tree.leaves(params["layers"])[0].shape[0]
+    h = x
+    for i in range(n_layers):
+        p_i = jax.tree.map(lambda a: a[i], params["layers"])
+        samples.append(jnp.ravel(L.norm_apply(h, p_i["ln1"], cfg.norm))[:max_per_layer])
+        h, _, _ = T.block_apply(h, p_i, cfg, rt, cb, positions)
+        samples.append(jnp.ravel(L.norm_apply(h, p_i["ln2"], cfg.norm))[:max_per_layer])
+    return samples
+
+
+def calibrate_from_model(params, tokens, cfg, rt, bcq_cfg=None, include_weights=True, **fit_kw):
+    """Paper §3 calibration: activations from one batch (+ the weights
+    themselves) → LO-BCQ universal codebooks."""
+    from repro.core.bcq import BCQConfig
+
+    bcq_cfg = bcq_cfg or BCQConfig()
+    samples = capture_gemm_inputs(params, tokens, cfg, rt)
+    if include_weights:
+        for leaf in jax.tree.leaves(params["layers"]):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 3:  # stacked kernels
+                samples.append(jnp.ravel(leaf)[: 1 << 16])
+    return fit_lobcq(samples, bcq_cfg, **fit_kw)

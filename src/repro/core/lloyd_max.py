@@ -1,0 +1,103 @@
+"""Batched Lloyd-Max scalar quantizer design (paper §A.1) + k-means++ seeding.
+
+``lloyd_max_batched`` fits ``N_c`` independent 2^B-level scalar quantizers,
+one per block-cluster, in a single vectorized loop: the per-cluster
+conditional means are computed with one ``segment_sum`` over
+``cluster_id * K + bin_id`` segments.  Empty bins keep their previous level,
+which both stabilizes the iteration and implements the paper's warm-start
+(levels are initialized from the previous LO-BCQ iteration's codebooks).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def quantile_init(x: jax.Array, k: int) -> jax.Array:
+    """K levels at uniform quantiles of x — a good Lloyd-Max starting point."""
+    qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+    return jnp.quantile(x.astype(jnp.float32), qs)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def lloyd_max_batched(
+    x: jax.Array,
+    assign: jax.Array,
+    levels: jax.Array,
+    weights: jax.Array | None = None,
+    iters: int = 25,
+) -> jax.Array:
+    """Run ``iters`` Lloyd-Max updates for every cluster simultaneously.
+
+    Args:
+      x:      (N,) scalars (already normalized into codebook range).
+      assign: (N,) int cluster id per scalar, in [0, N_c).
+      levels: (N_c, K) initial levels (warm start).
+      weights:(N,) optional sample weights.
+    Returns:
+      (N_c, K) updated levels, sorted ascending per cluster.
+    """
+    x = x.astype(jnp.float32)
+    nc, k = levels.shape
+    w = jnp.ones_like(x) if weights is None else weights.astype(jnp.float32)
+
+    def body(_, lv):
+        lv = jnp.sort(lv, axis=-1)
+        thr = 0.5 * (lv[:, 1:] + lv[:, :-1])  # (N_c, K-1)
+        t = thr[assign]  # (N, K-1)
+        bin_id = jnp.sum(x[:, None] >= t, axis=-1)  # (N,) in [0, K)
+        seg = assign * k + bin_id
+        s = jax.ops.segment_sum(x * w, seg, num_segments=nc * k)
+        n = jax.ops.segment_sum(w, seg, num_segments=nc * k)
+        mean = (s / jnp.maximum(n, 1e-12)).reshape(nc, k)
+        return jnp.where(n.reshape(nc, k) > 0, mean, lv)
+
+    levels = jax.lax.fori_loop(0, iters, body, levels.astype(jnp.float32))
+    return jnp.sort(levels, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def lloyd_max_1d(x: jax.Array, levels: jax.Array, iters: int = 50) -> jax.Array:
+    """Single-cluster Lloyd-Max (used for the per-tensor baseline, Table 11)."""
+    a = jnp.zeros(x.shape, dtype=jnp.int32)
+    return lloyd_max_batched(x, a, levels[None, :], iters=iters)[0]
+
+
+def quantize_to_levels(x: jax.Array, levels: jax.Array) -> jax.Array:
+    """Snap each scalar in x to the nearest of ``levels`` (1-D, sorted or not)."""
+    lv = jnp.sort(levels.astype(jnp.float32))
+    thr = 0.5 * (lv[1:] + lv[:-1])
+    idx = jnp.searchsorted(thr, x.astype(jnp.float32), side="right")
+    return lv[idx].astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("n_seeds",))
+def kmeanspp_seeds(blocks: jax.Array, n_seeds: int, key: jax.Array) -> jax.Array:
+    """K-means++ (D^2-sampling) seeding over block vectors.
+
+    Args:
+      blocks: (N_b, L_b) candidate block vectors.
+      n_seeds: number of seeds (= N_c).
+    Returns:
+      (n_seeds, L_b) seed blocks.
+    """
+    nb, lb = blocks.shape
+    blocks = blocks.astype(jnp.float32)
+    k0, key = jax.random.split(key)
+    first = blocks[jax.random.randint(k0, (), 0, nb)]
+    seeds = jnp.zeros((n_seeds, lb), jnp.float32).at[0].set(first)
+    d2 = jnp.sum((blocks - first) ** 2, axis=-1)
+
+    def body(i, carry):
+        seeds, d2, key = carry
+        key, kd = jax.random.split(key)
+        p = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        nxt = blocks[jax.random.categorical(kd, jnp.log(p + 1e-20))]
+        seeds = seeds.at[i].set(nxt)
+        d2 = jnp.minimum(d2, jnp.sum((blocks - nxt) ** 2, axis=-1))
+        return seeds, d2, key
+
+    seeds, _, _ = jax.lax.fori_loop(1, n_seeds, body, (seeds, d2, key))
+    return seeds

@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (prefill): scores never touch HBM.
+
+§Roofline found 32k-prefill memory-bound on the materialized (B,H,Sq,Skv)
+score/softmax tensors (≈10 TB/device HLO traffic for qwen1.5-32b).  This
+kernel is the standard online-softmax flash schedule on a
+(B·H, Sq/TQ, Skv/TK) grid: per (q-tile, kv-tile) step it keeps the running
+(max m, normalizer l, accumulator acc) in VMEM scratch, does the two
+(TQ,dh)·(TK,dh) dots on the MXU, and writes only the (TQ, dh) output —
+HBM traffic drops from O(S²) to O(S·dh).
+
+Validated in interpret mode against the model's chunked-attention
+reference (tests/test_flash_kernel.py); on TPU this is the drop-in for
+`_attend_chunked`'s inner computation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, tq, tk, causal, scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (TQ, dh)
+    k = k_ref[0].astype(jnp.float32)  # (TK, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (TQ, TK)
+    if causal:
+        rows = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        cols = kj * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        s = jnp.where(cols <= rows, s, NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ()))
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "tq", "tk", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    tq: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (BH, Sq, dh); k/v: (BH, Skv, dh) → (BH, Sq, dh).
+    Sq % tq == 0 and Skv % tk == 0 (wrapper in models pads)."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    assert sq % tq == 0 and skv % tk == 0
+    grid = (bh, sq // tq, skv // tk)
+    kernel = functools.partial(
+        _flash_kernel, tq=tq, tk=tk, causal=causal, scale=dh**-0.5
+    )
+    import jax.experimental.pallas.tpu as pltpu  # VMEM scratch (interpret-safe)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, causal=True, interpret=None):
+    """(B, S, H, D) convenience wrapper with GQA head replication."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tq = min(128, s)
+    tk = min(128, k.shape[1])
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, tq=tq, tk=tk, interpret=interpret)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU the compiled Pallas kernels run natively; on CPU
+(this container) the default is the pure-jnp oracle (`ref.py`) for speed,
+with ``impl="pallas"`` forcing interpret-mode Pallas — that is what the
+kernel test-suite sweeps.  Wrappers own all padding so kernels only ever
+see tile-aligned shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq
+from repro.core.bcq import BCQConfig
+from repro.kernels import ref
+from repro.kernels.bcq_matmul import bcq_matmul_pallas
+from repro.kernels.bcq_quantize import bcq_quantize_pallas
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedOperand:
+    idx_packed: jax.Array  # uint8 (R, Kp//2)
+    sel_packed: jax.Array  # uint8 (R, Kp//(2·L_b))
+    inv_scale: jax.Array  # f32  (R, Kp//L_A) = 1/(ŝ_A·s_X)
+    k: int  # unpadded reduction length (K % L_A == 0 required) — static
+    rows: int  # unpadded row count — static
+
+    def tree_flatten(self):
+        return (self.idx_packed, self.sel_packed, self.inv_scale), (self.k, self.rows)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad2d(x, row_mult, col_mult):
+    r, c = x.shape
+    pr, pc = (-r) % row_mult, (-c) % col_mult
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "tile_m", "tile_k"))
+def quantize(
+    x: jax.Array,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+    s_x: jax.Array | None = None,
+    impl: str | None = None,
+    tile_m: int = 128,
+    tile_k: int = 512,
+) -> PackedOperand:
+    """Encode a 2-D operand (rows × reduction-K) to packed LO-BCQ.
+
+    K must be a multiple of L_A so that tile padding consists of whole
+    arrays, which the inv-scale mask then zeroes exactly.
+    """
+    impl = impl or _default_impl()
+    rows, k = x.shape
+    assert k % cfg.array_len == 0, "packed path requires K % L_A == 0"
+    xf = x.astype(jnp.float32)
+    if s_x is None:
+        s_x = bcq.tensor_scale(xf, cfg)
+    if impl == "ref":
+        xp = _pad2d(xf, 1, cfg.array_len)
+        idx_p, sel_p, ratio = ref.quantize_ref(xp, codebooks, cfg, s_x)
+    else:
+        xp = _pad2d(xf, tile_m, tile_k)
+        idx_p, sel_p, ratio = bcq_quantize_pallas(
+            xp, codebooks, s_x, cfg, tile_m=tile_m, tile_k=tile_k,
+            interpret=jax.default_backend() != "tpu",
+        )
+    inv = 1.0 / (ratio * s_x)
+    # zero padded-K arrays so they contribute nothing to matmuls
+    ka = xp.shape[1] // cfg.array_len
+    valid = (jnp.arange(ka) * cfg.array_len) < k
+    inv = inv * valid[None, :]
+    return PackedOperand(idx_p, sel_p, inv, k, rows)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "tile_m", "tile_n", "tile_k"))
+def matmul(
+    a: PackedOperand,
+    w: PackedOperand,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+    impl: str | None = None,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 512,
+) -> jax.Array:
+    """W4A4 GEMM: (M, K)·(N, K)ᵀ on packed operands → f32 (M, N)."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        out = ref.matmul_ref(
+            a.idx_packed, a.sel_packed, a.inv_scale,
+            w.idx_packed, w.sel_packed, w.inv_scale,
+            codebooks, codebooks, cfg,
+        )
+        return out[: a.rows, : w.rows]
+
+    def padded(op: PackedOperand, rm: int) -> PackedOperand:
+        spb = cfg.block_len * 2
+        return PackedOperand(
+            _pad2d(op.idx_packed, rm, tile_k // 2),
+            _pad2d(op.sel_packed, rm, tile_k // spb),
+            _pad2d(op.inv_scale, rm, tile_k // cfg.array_len),
+            op.k,
+            op.rows,
+        )
+
+    ap, wp = padded(a, tile_m), padded(w, tile_n)
+    out = bcq_matmul_pallas(
+        ap.idx_packed, ap.sel_packed, ap.inv_scale,
+        wp.idx_packed, wp.sel_packed, wp.inv_scale,
+        codebooks, codebooks, cfg,
+        tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[: a.rows, : w.rows]
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def w4a4_linear(
+    x: jax.Array,
+    w_packed: PackedOperand,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+    impl: str | None = None,
+) -> jax.Array:
+    """Full LO-BCQ linear: on-the-fly activation quantization (dynamic s_X)
+    + W4A4 GEMM.  x: (..., K); weights pre-encoded (N, K).  Returns (..., N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    a = quantize(x2, codebooks, cfg, impl=impl)
+    out = matmul(a, w_packed, codebooks, cfg, impl=impl)
+    return out.reshape(*lead, -1).astype(x.dtype)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Contracts (all 2-D, blocks along K):
+
+``quantize_ref(x, codebooks, cfg, s_x)``
+    x: (M, K) with K % L_A == 0.  Returns
+      idx_packed: uint8 (M, K//2)          two 4-bit codeword indices / byte
+      sel_packed: uint8 (M, K//L_b//2)     two 4-bit codebook selectors / byte
+      ratio:      f32  (M, K//L_A)         E4M3-snapped ŝ_A = Q(s_A/s_X)
+    (s_X is computed by the caller — a per-tensor reduction.)
+
+``matmul_ref(a..., w..., inv scales)``
+    W4A4 GEMM: decode both operands' INT-B_c codewords, apply per-array
+    dequant scales, contract over K in f32:  out[m,n] = Σ_k Â[m,k]·Ŵ[n,k].
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq, formats
+from repro.core.bcq import BCQConfig, pack_nibbles, unpack_nibbles
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def quantize_ref(x: jax.Array, codebooks: jax.Array, cfg: BCQConfig, s_x: jax.Array):
+    m, k = x.shape
+    assert k % cfg.array_len == 0
+    xf = x.astype(jnp.float32)
+    arrays = xf.reshape(m, k // cfg.array_len, cfg.array_len)
+    ratio, scale = bcq._array_scales(arrays, cfg, s_x)
+    y = arrays * scale[..., None]
+    blocks = y.reshape(m, -1, cfg.block_len)
+    sel, idx = bcq._select_and_index(blocks, codebooks)
+    return (
+        pack_nibbles(idx.reshape(m, k)),
+        pack_nibbles(sel.reshape(m, -1)),
+        ratio.astype(jnp.float32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def decode_ref(
+    idx_packed: jax.Array,
+    sel_packed: jax.Array,
+    inv_scale: jax.Array,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+) -> jax.Array:
+    """Dequantize packed operand to f32 (M, K). inv_scale = 1/(ŝ_A·s_X)."""
+    idx = unpack_nibbles(idx_packed).astype(jnp.int32)  # (M, K)
+    m, k = idx.shape
+    nb = k // cfg.block_len
+    sel = unpack_nibbles(sel_packed).astype(jnp.int32)[..., :nb]
+    flat = codebooks.reshape(-1)
+    sel_s = jnp.repeat(sel, cfg.block_len, axis=-1)
+    vals = flat[sel_s * cfg.n_entries + idx]
+    inv_s = jnp.repeat(inv_scale, cfg.array_len, axis=-1)
+    return vals * inv_s
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def matmul_ref(
+    a_idx, a_sel, a_inv, w_idx, w_sel, w_inv, codebooks_a, codebooks_w, cfg: BCQConfig
+) -> jax.Array:
+    """out (M, N) f32 = dequant(A) @ dequant(W)^T, K contraction."""
+    a = decode_ref(a_idx, a_sel, a_inv, codebooks_a, cfg)
+    w = decode_ref(w_idx, w_sel, w_inv, codebooks_w, cfg)
+    return jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def inv_scale(ratio: jax.Array, s_x: jax.Array) -> jax.Array:
+    return 1.0 / (ratio * s_x)

@@ -1,0 +1,141 @@
+"""Continuous-batching serving scheduler (vLLM-style slot management).
+
+The serving engine keeps a fixed decode batch of ``n_slots``; requests
+stream in with different prompt/generation lengths.  The scheduler:
+
+* admits a new request into any free slot (prefilling its prompt into the
+  slot's region of the shared KV cache via the model's prefill on a
+  length-padded bucket — here, for simplicity, per-request prefill into a
+  slot-local cache then a slot write),
+* runs ONE fused decode step for all active slots per tick,
+* retires slots on EOS/len-limit and immediately refills them.
+
+This is host-side orchestration (pure Python around jitted steps) — the
+piece a real W4A4 deployment wraps around `zoo.decode_fn`.  Tested in
+tests/test_batching.py with deterministic greedy outputs equal to
+sequential single-request serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0  # absolute position of the next token
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over a shared stacked KV cache."""
+
+    def __init__(self, api, params, n_slots: int, max_len: int, eos_id: int = -1):
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos = eos_id
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self.caches = api.cache_init(n_slots, max_len)
+        self._decode = jax.jit(api.decode_fn)
+        self._next_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.finished: list[Request] = []
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            # per-request prefill into a 1-batch cache, then copy the
+            # prefix into this slot of the shared cache
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, c1 = self.api.prefill_fn(self.params, {"tokens": tokens}, self.max_len)
+            self.caches = jax.tree.map(
+                lambda big, small: big.at[:, i : i + 1].set(small.astype(big.dtype))
+                if big.ndim >= 2 and small.shape[1] == 1
+                else big,
+                self.caches, c1,
+            )
+            first = int(jnp.argmax(logits[0, -1]))
+            req.out.append(first)
+            slot.req = req
+            slot.pos = len(req.prompt)
+            self._next_tok = self._next_tok.at[i, 0].set(first)
+
+    # ------------------------------------------------------------- ticks
+    def _active(self):
+        return [i for i, s in enumerate(self.slots) if s.req is not None]
+
+    def step(self):
+        """Admit + one fused decode tick.  Returns #active slots."""
+        self._admit()
+        active = self._active()
+        if not active:
+            return 0
+        # all slots share one position-per-slot decode: the model's decode
+        # step takes a scalar position, so we tick per unique position
+        # group (greedy simple version: max pos works because each slot
+        # masks by its own cache validity... we instead loop groups).
+        by_pos: dict[int, list[int]] = {}
+        for i in active:
+            by_pos.setdefault(self.slots[i].pos, []).append(i)
+        for pos, idxs in sorted(by_pos.items()):
+            logits, new_caches = self._decode(
+                self.params, self.caches, self._next_tok, jnp.int32(pos)
+            )
+            # keep cache updates only for slots at this position
+            mask = np.zeros((self.n_slots,), bool)
+            mask[idxs] = True
+            mj = jnp.asarray(mask)
+
+            def merge(new, old):
+                if new.ndim >= 2 and new.shape[1] == self.n_slots:
+                    m = mj.reshape((1, self.n_slots) + (1,) * (new.ndim - 2))
+                    return jnp.where(m, new, old)
+                return new
+
+            self.caches = jax.tree.map(merge, new_caches, self.caches)
+            nxt = jnp.argmax(logits[:, -1, :], -1)
+            for i in idxs:
+                slot = self.slots[i]
+                tok = int(nxt[i])
+                slot.req.out.append(tok)
+                slot.pos += 1
+                if (
+                    tok == self.eos
+                    or len(slot.req.out) >= slot.req.max_new + 1
+                    or slot.pos >= self.max_len - 1
+                ):
+                    slot.req.done = True
+                    self.finished.append(slot.req)
+                    self.slots[i] = _Slot()
+                else:
+                    self._next_tok = self._next_tok.at[i, 0].set(tok)
+        return len(active)
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or self._active()) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished, ticks

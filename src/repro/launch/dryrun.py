@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init.  512 host devices back the production meshes:
+(16, 16) single-pod and (2, 16, 16) multi-pod.
+
+Per cell this script:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer / batch /
+     caches (no allocation anywhere),
+  2. jit-lowers the real train_step / prefill / decode_step with explicit
+     in/out shardings from the zoo sharding rules,
+  3. ``.lower().compile()`` — sharding mismatches, OOM-at-compile and
+     unsupported collectives fail here,
+  4. records memory_analysis + cost_analysis + parsed collective bytes →
+     the three-term roofline (launch/roofline.py) into a JSONL file.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_is_applicable, get_arch
+from repro.launch import mesh as mesh_lib, roofline
+from repro.models import zoo
+from repro.models.layers import Runtime
+from repro.optim import adamw
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_runtime(kind: str, args, unroll: bool) -> Runtime:
+    if kind == "train":
+        return Runtime(
+            quant_mode=args.train_quant,
+            compute_dtype=jnp.bfloat16,
+            param_dtype=jnp.bfloat16,
+            remat=not args.no_remat,
+            remat_policy=args.remat_policy,
+            logit_chunk=args.logit_chunk,
+            attn_chunk=args.attn_chunk,
+            unroll=unroll,
+            attn_f32=not args.attn_bf16,
+        )
+    return Runtime(
+        quant_mode=args.quant,
+        compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16,
+        cache_kind=args.cache,
+        attn_chunk=args.attn_chunk,
+        logit_chunk=args.logit_chunk,
+        unroll=unroll,
+        flash_decode=args.flash_decode,
+        attn_f32=not args.attn_bf16,
+    )
+
+
+def _compile(cfg, shape, mesh, rt, args):
+    import dataclasses as _dc
+
+    if rt.flash_decode and shape.kind == "decode":
+        rt = _dc.replace(rt, mesh=mesh)
+    api = zoo.build(cfg, rt)
+    axes = mesh_lib.axis_sizes(mesh)
+    params_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    param_sh = _named(mesh, zoo.param_pspecs(params_shapes, axes))
+    in_specs = zoo.input_specs(cfg, rt, shape)
+    batch_sh = _named(mesh, zoo.batch_pspecs(in_specs, axes))
+
+    with mesh:
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(adamw.init_state, params_shapes)
+            opt_sh = {"m": param_sh, "v": param_sh, "step": NamedSharding(mesh, P())}
+            opt_cfg = adamw.AdamWConfig()
+
+            def train_step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(api.loss_fn)(params, batch)
+                params, opt_state, m = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+                return params, opt_state, m["grad_norm"], loss
+
+            fn = jax.jit(
+                train_step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None, None),
+            )
+            lowered = fn.lower(params_shapes, opt_shapes, in_specs)
+        elif shape.kind == "prefill":
+            fn = jax.jit(
+                lambda p, b: api.prefill_fn(p, b, shape.seq_len),
+                in_shardings=(param_sh, batch_sh),
+            )
+            lowered = fn.lower(params_shapes, in_specs)
+        else:  # decode
+            cache_shapes = zoo.cache_specs(cfg, rt, shape)
+            cache_sh = _named(mesh, zoo.cache_pspecs(cache_shapes, axes))
+            tok_sh = _named(mesh, zoo.batch_pspecs(in_specs, axes))
+            fn = jax.jit(
+                api.decode_fn,
+                in_shardings=(param_sh, cache_sh, tok_sh["tokens"], NamedSharding(mesh, P())),
+                out_shardings=(None, cache_sh),
+            )
+            lowered = fn.lower(
+                params_shapes,
+                cache_shapes,
+                in_specs["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        return lowered.compile()
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, args) -> dict:
+    """Compile twice: looped (deployable artifact — exact memory_analysis)
+    and unrolled (exact cost_analysis: XLA counts while bodies once)."""
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    rec = {
+        "arch": arch_id, "shape": shape_name, "kind": shape.kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "quant": args.train_quant if shape.kind == "train" else args.quant,
+        "cache": args.cache if shape.kind == "decode" else "-",
+        "tag": args.tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    rt_loop = make_runtime(shape.kind, args, False)
+    compiled_loop = _compile(cfg, shape, mesh, rt_loop, args)
+    t_loop = time.time() - t0
+    mf = roofline.model_flops(cfg, shape, n_chips)
+    rl_loop = roofline.analyse(compiled_loop, mf)
+    rec.update(status="ok", compile_loop_s=round(t_loop, 1))
+
+    # analytic per-device footprints (exact from shape trees; sharding even)
+    def _tree_bytes(tree):
+        return sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+            if hasattr(x, "dtype")
+        )
+
+    api_l = zoo.build(cfg, rt_loop)
+    p_bytes = _tree_bytes(jax.eval_shape(api_l.init, jax.random.PRNGKey(0)))
+    rec["params_gib_per_dev"] = round(p_bytes / n_chips / 2**30, 3)
+    if shape.kind == "decode":
+        c_bytes = _tree_bytes(zoo.cache_specs(cfg, rt_loop, shape))
+        rec["cache_gib_per_dev"] = round(c_bytes / n_chips / 2**30, 3)
+        # textbook decode memory roofline: read params once + cache once
+        rec["t_memory_analytic_s"] = (p_bytes + c_bytes) / n_chips / roofline.HBM_BW
+    try:
+        rec["memory_analysis"] = str(compiled_loop.memory_analysis())[:400]
+    except Exception:
+        pass
+
+    if args.no_unroll:
+        rec.update(**rl_loop.row())
+        rec["cost_source"] = "looped (while bodies undercounted)"
+        return rec
+    t0 = time.time()
+    compiled_unroll = _compile(cfg, shape, mesh, make_runtime(shape.kind, args, True), args)
+    rl = roofline.analyse(compiled_unroll, mf)
+    rl.peak_mem_bytes = rl_loop.peak_mem_bytes  # loop buffers are the real ones
+    rec.update(compile_unroll_s=round(time.time() - t0, 1), **rl.row())
+    rec["cost_source"] = "unrolled"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="fake", choices=["none", "fake", "fake_full", "packed"])
+    ap.add_argument("--train-quant", default="none", choices=["none", "fake", "fake_full"])
+    ap.add_argument("--cache", default="bf16", choices=["bf16", "int8", "bcq4"])
+    ap.add_argument("--attn-chunk", type=int, default=1024)
+    ap.add_argument("--logit-chunk", type=int, default=512)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep while-loops (faster compile, undercounted cost_analysis)")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="sequence-sharded shard_map decode attention")
+    ap.add_argument("--remat-policy", default="full", choices=["full", "dots"])
+    ap.add_argument("--moe-spec", default="fsdp", choices=["fsdp", "tp2d"])
+    ap.add_argument("--param-layout", default="fsdp", choices=["fsdp", "tp"],
+                    help="'tp' = serving layout: no FSDP weight gathers")
+    ap.add_argument("--attn-bf16", action="store_true",
+                    help="bf16 attention scores (f32 softmax reduction)")
+    ap.add_argument("--tag", default="", help="free-form label copied to the record")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    zoo.MOE_EXPERT_SPEC = args.moe_spec
+    zoo.PARAM_LAYOUT = args.param_layout
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = n_fail = n_skip = 0
+    for multi in meshes:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+        for a in archs:
+            for s in shapes:
+                try:
+                    rec = lower_cell(a, s, mesh, args)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {
+                        "arch": a, "shape": s,
+                        "mesh": "x".join(map(str, mesh.devices.shape)),
+                        "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-1500:],
+                    }
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_fail += st == "FAIL"
+                n_skip += st == "skipped"
+                line = {k: v for k, v in rec.items() if k != "trace"}
+                print(json.dumps(line), flush=True)
+                if rec.get("trace"):
+                    print(rec["trace"], flush=True)
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+    print(f"# dry-run done: ok={n_ok} skipped={n_skip} FAILED={n_fail}", flush=True)
+    if out_f:
+        out_f.close()
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

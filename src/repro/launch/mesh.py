@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 TPU v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis rides
+DCN and is data-parallel by default (optionally pipeline, runtime/pipeline).
+
+Defined as functions (not module constants) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch: ('pod', 'data') multi-pod, else ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,113 @@
+"""Offline PTQ CLI: checkpoint → LO-BCQ artifacts (the paper's deploy step).
+
+Reads a training checkpoint, calibrates (or loads) universal codebooks,
+and writes a *serving artifact*:
+  - fake-quant checkpoint (weights snapped to the LO-BCQ grid, bf16 —
+    drop-in for quant_mode='fake' serving), and/or
+  - packed 4-bit checkpoint (uint8 buffers for quant_mode='packed' /
+    the Pallas decode-GEMM path),
+plus the frozen codebooks and a JSON manifest with bit accounting.
+
+  PYTHONPATH=src python -m repro.launch.quantize \\
+      --ckpt /tmp/repro_ckpt --arch gpt3_126m --smoke --out /tmp/w4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt_lib
+from repro.configs.base import get_arch, get_smoke
+from repro.core import ptq
+from repro.core.bcq import BCQConfig, CodebookSet
+from repro.core.calibrate import calibrate_from_model, default_universal_codebooks
+from repro.models import layers, zoo
+from repro.models.layers import Runtime
+
+
+def quantize_checkpoint(
+    params,
+    cfg,
+    bcq_cfg: BCQConfig,
+    out_dir: str,
+    calib_tokens=None,
+    write_packed: bool = True,
+) -> dict:
+    rt = Runtime(quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32)
+    if calib_tokens is not None and cfg.family == "dense":
+        cbs = calibrate_from_model(params, calib_tokens, cfg, rt, bcq_cfg, iters=15)
+    else:
+        cbs = default_universal_codebooks(bcq_cfg)
+    cb = cbs.as_jnp()
+
+    os.makedirs(out_dir, exist_ok=True)
+    cbs.save(os.path.join(out_dir, "codebooks.json"))
+
+    # fake-quant (grid-snapped bf16) serving checkpoint
+    pq = ptq.quantize_params(params, cb, bcq_cfg)
+    pq["codebooks"] = cb
+    ckpt_lib.save_pytree(os.path.join(out_dir, "weights_w4_fake.npz"), pq)
+
+    packed_paths = {}
+    if write_packed:
+        enc = ptq.encode_params(params, cb, bcq_cfg)
+        packed = {
+            path.strip("/").replace("/", "."): {
+                "idx": e.packed_idx, "sel": e.packed_sel,
+                "scale": e.scale_code, "s_x": e.s_x,
+            }
+            for path, (e, _) in enc.items()
+        }
+        ckpt_lib.save_pytree(os.path.join(out_dir, "weights_w4_packed.npz"), packed)
+        packed_paths = {k: list(v["idx"].shape) for k, v in packed.items()}
+
+    stats = ptq.count_quantized_bits(params, bcq_cfg)
+    manifest = {
+        "arch": cfg.name,
+        "bcq": {"L_b": bcq_cfg.block_len, "L_A": bcq_cfg.array_len,
+                "N_c": bcq_cfg.n_codebooks, "bits": bcq_cfg.bitwidth()},
+        "codebook_bytes": cbs.nbytes(),
+        "params": stats["params"],
+        "gemm_params": stats["gemm_params"],
+        "compression_vs_bf16": stats["compression"],
+        "packed_tensors": packed_paths,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", required=True)
+    ap.add_argument("--arch", default="gpt3_126m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--array-len", type=int, default=64)
+    ap.add_argument("--n-codebooks", type=int, default=8)
+    ap.add_argument("--no-packed", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    cm = ckpt_lib.CheckpointManager(args.ckpt)
+    restored = cm.restore()
+    assert restored is not None, f"no checkpoint under {args.ckpt}"
+    step, state = restored
+    params = jax.tree.map(jnp.asarray, state["params"])
+    bcq_cfg = BCQConfig(array_len=args.array_len, n_codebooks=args.n_codebooks)
+
+    from repro.data.pipeline import DataConfig, batch_at
+
+    calib = batch_at(DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=4), 999_999)["tokens"]
+    m = quantize_checkpoint(params, cfg, bcq_cfg, args.out, calib, not args.no_packed)
+    print(json.dumps({k: v for k, v in m.items() if k != "packed_tensors"}, indent=1))
+    print(f"artifacts in {args.out}: codebooks.json, weights_w4_fake.npz"
+          + ("" if args.no_packed else ", weights_w4_packed.npz"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Three-term roofline extraction from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory     = HLO_bytes / HBM_bw               (per chip)
+  collective = collective_bytes / link_bw       (per chip)
+
+cost_analysis() on the SPMD-partitioned module reports *per-device*
+FLOPs/bytes; collective bytes are not included there, so we parse the
+compiled HLO text and sum the output-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind (…-start counted once)."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # avoid double counting start/done pairs: count only lines where the
+        # op name is not the *-done variant
+        pre = hlo_text[max(0, m.start() - 160) : m.start()]
+        if "-done" in pre.rsplit("\n", 1)[-1]:
+            continue
+        out[kind] = out.get(kind, 0.0) + _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: dict
+    model_flops: float  # analytic useful FLOPs per device
+    peak_mem_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the peak-FLOPs roofline the bound-term step achieves
+        on *useful* model FLOPs: (model_flops/peak) / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.t_bound
+
+    def row(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_dev": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_gib": self.peak_mem_bytes / 2**30,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def analyse(compiled, model_flops_per_dev: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes", "output_size_in_bytes"):
+        peak += float(getattr(mem, attr, 0.0) or 0.0)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=sum(coll.values()),
+        coll_breakdown=coll,
+        model_flops=model_flops_per_dev,
+        peak_mem_bytes=peak,
+    )
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """Analytic useful FLOPs per device: 6·N_active·tokens (train),
+    2·N_active·tokens (+attention) for inference."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention score/value FLOPs (quadratic part), forward only
+    if cfg.family in ("dense", "moe", "vlm"):
+        att_tok = shape.seq_len if shape.kind != "decode" else shape.seq_len  # kv len
+        q_tok = shape.seq_len if shape.kind != "decode" else 1
+        causal = 0.5 if shape.kind != "decode" else 1.0
+        a = 4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * q_tok * att_tok * causal * shape.global_batch
+        flops += a * (3.0 if shape.kind == "train" else 1.0)
+    return flops / n_chips

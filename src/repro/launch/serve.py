@@ -1,0 +1,101 @@
+"""Batched W4A4 serving driver (the paper-kind end-to-end example).
+
+Loads (or trains a few steps of) a model, PTQs weights with the frozen
+universal codebooks, then serves batched requests: prefill the prompt
+batch, greedy-decode N tokens with on-the-fly LO-BCQ activation
+quantization at every GEMM.  Reports tokens/s and compares W4A4 outputs to
+the bf16 baseline.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt3_126m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch, get_smoke
+from repro.core import ptq
+from repro.core.bcq import BCQConfig
+from repro.core.calibrate import default_universal_codebooks
+from repro.data.pipeline import DataConfig, batch_at
+from repro.models import zoo
+from repro.models.layers import Runtime
+
+
+def greedy_generate(api, params, prompts, gen_len: int, max_len: int):
+    b, s = prompts.shape
+    logits, caches = jax.jit(lambda p, t: api.prefill_fn(p, {"tokens": t}, max_len))(
+        params, prompts
+    )
+    step = jax.jit(api.decode_fn)
+    out = [jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)]
+    for t in range(gen_len - 1):
+        logits, caches = step(params, caches, out[-1][:, None], jnp.int32(s + t))
+        out.append(jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32))
+    return jnp.stack(out, 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt3_126m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache", default="bf16", choices=["bf16", "int8", "bcq4"])
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    bcq_cfg = BCQConfig()
+    cbs = default_universal_codebooks(bcq_cfg)
+    cb = cbs.as_jnp()
+
+    rt_bf16 = Runtime(quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32)
+    rt_w4a4 = Runtime(
+        quant_mode="fake", bcq_cfg=bcq_cfg, compute_dtype=jnp.float32,
+        param_dtype=jnp.float32, cache_kind=args.cache,
+    )
+    api = zoo.build(cfg, rt_bf16)
+    api_q = zoo.build(cfg, rt_w4a4)
+    params = api.init(jax.random.PRNGKey(0))
+
+    # --- PTQ: quantize GEMM weights offline with the frozen codebooks ----
+    params_q = ptq.quantize_params(params, cb, bcq_cfg)
+    params_q["codebooks"] = cb
+    stats = ptq.count_quantized_bits(params, bcq_cfg)
+    print(
+        f"arch={cfg.name} params={stats['params']/1e6:.1f}M "
+        f"PTQ compression {stats['compression']:.2f}× "
+        f"({bcq_cfg.bitwidth():.3f} bits/GEMM-weight)"
+    )
+
+    prompts = batch_at(
+        DataConfig(vocab=cfg.vocab, seq_len=args.prompt_len, global_batch=args.batch),
+        0,
+    )["tokens"]
+    max_len = args.prompt_len + args.gen + 1
+
+    t0 = time.time()
+    ref = greedy_generate(api, params, prompts, args.gen, max_len)
+    t_ref = time.time() - t0
+    t0 = time.time()
+    got = greedy_generate(api_q, params_q, prompts, args.gen, max_len)
+    t_q = time.time() - t0
+
+    agree = float(jnp.mean((ref == got).astype(jnp.float32)))
+    toks = args.batch * args.gen
+    print(f"bf16   : {toks/t_ref:8.1f} tok/s (CPU emulation timing)")
+    print(f"W4A4   : {toks/t_q:8.1f} tok/s (fake-quant path, cache={args.cache})")
+    print(f"greedy token agreement W4A4 vs bf16: {agree*100:.1f}%")
+    print("sample bf16:", np.asarray(ref[0][:10]))
+    print("sample w4a4:", np.asarray(got[0][:10]))
+    return agree
+
+
+if __name__ == "__main__":
+    main()

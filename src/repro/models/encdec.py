@@ -1,0 +1,175 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, T_enc, D).  Encoder =
+bidirectional self-attention stack (learned positions); decoder = causal
+self-attention + cross-attention with a KV cache for serving.  All GEMMs
+(incl. cross-attention projections) follow rt.quant_mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, transformer
+from repro.models.layers import Runtime
+
+
+def _sinusoidal(length, d):
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _sinusoidal_at(positions, d):
+    """Sinusoidal embedding evaluated directly at (B, S) positions."""
+    i = jnp.arange(d // 2)[None, None, :].astype(jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_enc_block(key, cfg: ArchConfig, rt: Runtime):
+    return {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "attn": layers.init_attention(key, cfg, rt),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "mlp": layers.init_mlp(jax.random.fold_in(key, 1), cfg.d_model, cfg.d_ff, cfg.act, rt),
+    }
+
+
+def init_dec_block(key, cfg: ArchConfig, rt: Runtime):
+    p = init_enc_block(key, cfg, rt)
+    p["ln_x"] = layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype)
+    p["xattn"] = layers.init_attention(jax.random.fold_in(key, 2), cfg, rt)
+    return p
+
+
+def init_encdec(key, cfg: ArchConfig, rt: Runtime):
+    params = transformer.init_embed(key, cfg, rt)
+    ek = jax.random.split(jax.random.fold_in(key, 3), cfg.n_encoder_layers)
+    dk = jax.random.split(jax.random.fold_in(key, 4), cfg.n_layers)
+    params["enc_layers"] = jax.vmap(lambda k: init_enc_block(k, cfg, rt))(ek)
+    params["dec_layers"] = jax.vmap(lambda k: init_dec_block(k, cfg, rt))(dk)
+    params["ln_enc"] = layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype)
+    params["ln_f"] = layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype)
+    if rt.quant_mode != "none":
+        params["codebooks"] = jnp.zeros((rt.bcq_cfg.n_codebooks, rt.bcq_cfg.n_entries), jnp.float32)
+    return params
+
+
+def encode(params, frames, cfg: ArchConfig, rt: Runtime):
+    """frames: (B, T_enc, D) stub embeddings → encoder states."""
+    cb = params.get("codebooks")
+    b, t, d = frames.shape
+    x = frames.astype(rt.compute_dtype) + _sinusoidal(t, d)[None].astype(rt.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    def body(h, p):
+        hh = layers.norm_apply(h, p["ln1"], cfg.norm)
+        a, _ = layers.attention(
+            hh, p["attn"], cfg, rt, cb, positions, causal=False, use_rope=False
+        )
+        h = h + a
+        hh = layers.norm_apply(h, p["ln2"], cfg.norm)
+        return h + layers.mlp(hh, p["mlp"], cfg.act, rt, cb), None
+
+    body_fn = layers.maybe_remat(body, rt)
+    x, _ = jax.lax.scan(
+        body_fn, x, params["enc_layers"],
+        unroll=cfg.n_encoder_layers if rt.unroll else 1,
+    )
+    return layers.norm_apply(x, params["ln_enc"], cfg.norm)
+
+
+def _dec_block(h, p, cfg, rt, cb, positions, enc_kv, cache=None, cache_pos=None):
+    hh = layers.norm_apply(h, p["ln1"], cfg.norm)
+    a, new_cache = layers.attention(
+        hh, p["attn"], cfg, rt, cb, positions,
+        cache=cache, cache_pos=cache_pos, causal=True, use_rope=False,
+    )
+    h = h + a
+    hh = layers.norm_apply(h, p["ln_x"], cfg.norm)
+    xa, _ = layers.attention(
+        hh, p["xattn"], cfg, rt, cb, positions,
+        causal=False, kv_override=enc_kv, use_rope=False,
+    )
+    h = h + xa
+    hh = layers.norm_apply(h, p["ln2"], cfg.norm)
+    return h + layers.mlp(hh, p["mlp"], cfg.act, rt, cb), new_cache
+
+
+def _cross_kv(params, enc_out, cfg, rt, cb):
+    """Precompute per-layer cross K/V from encoder output (scan-stacked)."""
+    b, t, _ = enc_out.shape
+    hd = cfg.head_dim
+
+    def one(p):
+        k, v = layers.qdense_shared(enc_out, [p["xattn"]["wk"], p["xattn"]["wv"]], rt, cb)
+        return (k.reshape(b, t, cfg.n_kv_heads, hd), v.reshape(b, t, cfg.n_kv_heads, hd))
+
+    _, out = jax.lax.scan(
+        lambda c, p: (c, one(p)), None, params["dec_layers"],
+        unroll=cfg.n_layers if rt.unroll else 1,
+    )
+    return out
+
+
+def decoder(params, tokens, enc_out, cfg, rt: Runtime, positions, caches=None, cache_pos=None, xkv=None):
+    cb = params.get("codebooks")
+    b, s = tokens.shape
+    x = transformer.embed_tokens(params, tokens, rt)
+    x = x + _sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+    if xkv is None:
+        xkv = _cross_kv(params, enc_out, cfg, rt, cb)
+
+    def body(carry, xs):
+        h = carry
+        p_layer, (xk, xv), cache_layer = xs
+        h, nc = _dec_block(
+            h, p_layer, cfg, rt, cb, positions, (xk, xv), cache_layer, cache_pos
+        )
+        return h, nc
+
+    body_fn = layers.maybe_remat(body, rt)
+    x, new_caches = jax.lax.scan(
+        body_fn, x, (params["dec_layers"], xkv, caches),
+        unroll=cfg.n_layers if rt.unroll else 1,
+    )
+    x = layers.norm_apply(x, params["ln_f"], cfg.norm)
+    return x, (new_caches if caches is not None else None)
+
+
+def forward_train(params, batch, cfg: ArchConfig, rt: Runtime):
+    """batch: {'frames' (B,T,D), 'tokens' (B,S), 'labels' (B,S)}."""
+    enc_out = encode(params, batch["frames"], cfg, rt)
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _ = decoder(params, batch["tokens"], enc_out, cfg, rt, positions)
+    return transformer.xent_loss(params, x, batch["labels"], rt, batch.get("mask"))
+
+
+def prefill(params, batch, cfg: ArchConfig, rt: Runtime, max_len):
+    enc_out = encode(params, batch["frames"], cfg, rt)
+    cb = params.get("codebooks")
+    xkv = _cross_kv(params, enc_out, cfg, rt, cb)
+    b, s = batch["tokens"].shape
+    caches = transformer.cache_init_stacked(cfg, rt, b, max_len)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, caches = decoder(
+        params, batch["tokens"], enc_out, cfg, rt, positions, caches, cache_pos=0, xkv=xkv
+    )
+    logits = transformer.lm_logits(params, x[:, -1:, :], rt)
+    return logits, {"self": caches, "xkv": xkv}
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime):
+    b, s = tokens.shape
+    positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, new_self = decoder(
+        params, tokens, None, cfg, rt, positions,
+        caches["self"], cache_pos=pos, xkv=caches["xkv"],
+    )
+    logits = transformer.lm_logits(params, x, rt)
+    return logits, {"self": new_self, "xkv": caches["xkv"]}

@@ -1,0 +1,314 @@
+"""RecurrentGemma/Griffin-style hybrid: RG-LRU recurrent blocks + local
+sliding-window attention in a 1:2 pattern (arXiv:2402.19427).
+
+Layers are scanned per *period* (rec, rec, attn) — 12 periods + 2 tail
+recurrent layers for the 38-layer 9B config — so compile cost stays one
+period regardless of depth.  Decode uses a ring-buffer window cache
+(window-sized regardless of absolute sequence length → long_500k decode is
+O(window)) and an O(1) LRU state.  Input/gate/output projections are GEMMs
+(LO-BCQ applies); the elementwise LRU recurrence is not a GEMM and stays
+f32 (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, transformer
+from repro.models.layers import Runtime, init_qdense, qdense
+
+_C = 8.0  # RG-LRU temperature
+
+
+# ----------------------------------------------------------- RG-LRU block
+def init_rec_block(key, cfg: ArchConfig, rt: Runtime):
+    w = cfg.hybrid.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "proj_x": init_qdense(ks[0], cfg.d_model, w, rt),
+        "proj_gate": init_qdense(ks[1], cfg.d_model, w, rt),
+        "conv_kernel": layers.uinit(ks[2], (4, w), scale=0.5, dtype=rt.param_dtype),
+        "gate_a": init_qdense(ks[3], w, w, rt),
+        "gate_x": init_qdense(ks[4], w, w, rt),
+        "lru_a": layers.uinit(ks[5], (w,), scale=1.0, dtype=jnp.float32),
+        "proj_out": init_qdense(jax.random.fold_in(key, 9), w, cfg.d_model, rt),
+        "ln_mlp": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "mlp": layers.init_mlp(jax.random.fold_in(key, 10), cfg.d_model, cfg.d_ff, cfg.act, rt),
+    }
+
+
+def _lru_scan(a, u, state=None):
+    """h_t = a_t ⊙ h_{t-1} + u_t along axis 1, associative-scan parallel.
+    a, u: (B, S, W); state: (B, W) initial or None."""
+    if state is not None:
+        u = u.at[:, 0, :].add(a[:, 0, :] * state)
+
+    def combine(lhs, rhs):
+        al, ul = lhs
+        ar, ur = rhs
+        return al * ar, ur + ar * ul
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h
+
+
+def rec_block(x, p, cfg: ArchConfig, rt: Runtime, cb, cache=None):
+    """Returns (y, new_cache).  cache: {'lru_state' (B,W), 'conv_state'}."""
+    h = layers.norm_apply(x, p["ln"], cfg.norm)
+    xw, gate_pre = layers.qdense_shared(h, [p["proj_x"], p["proj_gate"]], rt, cb)
+    gate = jax.nn.gelu(gate_pre.astype(jnp.float32))
+    conv_state = cache["conv_state"] if cache is not None else None
+    xc, new_conv = _conv(xw, p["conv_kernel"].astype(jnp.float32), conv_state)
+    r_pre, i_pre = layers.qdense_shared(
+        xc.astype(rt.compute_dtype), [p["gate_a"], p["gate_x"]], rt, cb)
+    r = jax.nn.sigmoid(r_pre.astype(jnp.float32))
+    i = jax.nn.sigmoid(i_pre.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lru_a"]) * r  # (B, S, W)
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc)
+    prev = cache["lru_state"] if cache is not None else None
+    hseq = _lru_scan(a, u, prev)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"lru_state": hseq[:, -1, :], "conv_state": new_conv}
+    out = qdense((hseq * gate).astype(rt.compute_dtype), p["proj_out"], rt, cb)
+    x = x + out
+    hm = layers.norm_apply(x, p["ln_mlp"], cfg.norm)
+    return x + layers.mlp(hm, p["mlp"], cfg.act, rt, cb), new_cache
+
+
+def _conv(x, kernel, state=None):
+    k = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), jnp.float32)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x.astype(jnp.float32)], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :] for i in range(k))
+    return out, xp[:, xp.shape[1] - (k - 1) :, :]
+
+
+# ------------------------------------------- ring-buffer window attention
+def init_attn_block(key, cfg: ArchConfig, rt: Runtime):
+    return {
+        "ln": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "attn": layers.init_attention(key, cfg, rt),
+        "ln_mlp": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "mlp": layers.init_mlp(jax.random.fold_in(key, 1), cfg.d_model, cfg.d_ff, cfg.act, rt),
+    }
+
+
+def window_cache_init(batch, cfg: ArchConfig, rt: Runtime):
+    w = cfg.hybrid.window
+    c = layers.cache_init(batch, w, cfg.n_kv_heads, cfg.head_dim, rt.cache_kind, rt.bcq_cfg)
+    c["pos_buf"] = jnp.full((batch, w), -1, jnp.int32)
+    return c
+
+
+def attn_block(x, p, cfg: ArchConfig, rt: Runtime, cb, positions, cache=None, cache_pos=None):
+    h = layers.norm_apply(x, p["ln"], cfg.norm)
+    w = cfg.hybrid.window
+    if cache is None:
+        out, _ = layers.attention(
+            h, p["attn"], cfg, rt, cb, positions, causal=True, window=w
+        )
+        new_cache = None
+    elif h.shape[1] > 1:
+        # prefill with a cache: parallel windowed attention, then fill the
+        # ring buffer with the last `window` tokens' K/V.
+        b, s, _ = h.shape
+        hd = cfg.head_dim
+        out, _ = layers.attention(
+            h, p["attn"], cfg, rt, cb, positions, causal=True, window=w
+        )
+        k, v = layers.qdense_shared(h, [p["attn"]["wk"], p["attn"]["wv"]], rt, cb)
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        n_keep = min(s, w)
+        slots = (s - n_keep + jnp.arange(n_keep)) % w  # ring slot per kept token
+        kv_cache = {n: cache[n] for n in cache if n != "pos_buf"}
+        # quantize the kept K/V through a window-sized staging write, then
+        # scatter each token into its ring slot
+        staged = layers.cache_write(
+            kv_cache, k[:, -n_keep:], v[:, -n_keep:], 0, rt.cache_kind, rt.bcq_cfg, cb
+        )
+        new_cache = {}
+        for n in kv_cache:
+            if cache[n].ndim < 2:  # per-tensor scalars (bcq4 s_x)
+                new_cache[n] = staged[n]
+                continue
+            src = staged[n][:, :n_keep]
+            new_cache[n] = cache[n].at[:, slots].set(src.astype(cache[n].dtype))
+        pb = jnp.full((b, w), -1, jnp.int32)
+        new_cache["pos_buf"] = pb.at[:, slots].set(
+            jnp.broadcast_to((s - n_keep + jnp.arange(n_keep))[None, :], (b, n_keep))
+        )
+        x = x + out
+        hm = layers.norm_apply(x, p["ln_mlp"], cfg.norm)
+        return x + layers.mlp(hm, p["mlp"], cfg.act, rt, cb), new_cache
+    else:
+        # ring-buffer decode: write K/V at slot pos % window, mask by the
+        # stored absolute positions — cache stays O(window) at any seq len.
+        b, s, _ = h.shape
+        hd = cfg.head_dim
+        q, k, v = layers.qdense_shared(h, [p["attn"]["wq"], p["attn"]["wk"], p["attn"]["wv"]], rt, cb)
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        slot = cache_pos % w
+        new_cache = dict(
+            layers.cache_write(
+                {n: cache[n] for n in cache if n != "pos_buf"},
+                k, v, slot, rt.cache_kind, rt.bcq_cfg, cb,
+            )
+        )
+        new_cache["pos_buf"] = jax.lax.dynamic_update_slice(
+            cache["pos_buf"], positions.astype(jnp.int32), (0, slot)
+        )
+        kf, vf = layers.cache_read(new_cache, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype)
+        # attend with absolute-position mask over ring slots
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kx = jnp.repeat(kf, rep, 2) if rep > 1 else kf
+        vx = jnp.repeat(vf, rep, 2) if rep > 1 else vf
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+        s_ = s_ * hd**-0.5
+        pb = new_cache["pos_buf"]  # (B, W) absolute positions
+        valid = (pb[:, None, None, :] >= 0) & (pb[:, None, None, :] <= positions[:, None, :, None])
+        valid &= positions[:, None, :, None] - pb[:, None, None, :] < w
+        s_ = jnp.where(valid, s_, -1e30)
+        att = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, vx.astype(jnp.float32)).astype(rt.compute_dtype)
+        out = qdense(o.reshape(b, s, cfg.n_heads * hd), p["attn"]["wo"], rt, cb)
+    x = x + out
+    hm = layers.norm_apply(x, p["ln_mlp"], cfg.norm)
+    return x + layers.mlp(hm, p["mlp"], cfg.act, rt, cb), new_cache
+
+
+# ----------------------------------------------------------- full hybrid
+def _counts(cfg: ArchConfig):
+    period = len(cfg.hybrid.pattern)
+    n_periods = cfg.n_layers // period
+    tail = cfg.n_layers - n_periods * period
+    return period, n_periods, tail
+
+
+def init_hybrid(key, cfg: ArchConfig, rt: Runtime):
+    period, n_periods, tail = _counts(cfg)
+    params = transformer.init_embed(key, cfg, rt)
+
+    def init_period(k):
+        ks = jax.random.split(k, period)
+        return {
+            f"b{i}": (
+                init_attn_block(ks[i], cfg, rt)
+                if cfg.hybrid.pattern[i] == "attn"
+                else init_rec_block(ks[i], cfg, rt)
+            )
+            for i in range(period)
+        }
+
+    pkeys = jax.random.split(jax.random.fold_in(key, 2), n_periods)
+    params["periods"] = jax.vmap(init_period)(pkeys)
+    for t in range(tail):
+        params[f"tail{t}"] = init_rec_block(jax.random.fold_in(key, 100 + t), cfg, rt)
+    params["ln_f"] = layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype)
+    if rt.quant_mode != "none":
+        params["codebooks"] = jnp.zeros((rt.bcq_cfg.n_codebooks, rt.bcq_cfg.n_entries), jnp.float32)
+    return params
+
+
+def hybrid_cache_init(cfg: ArchConfig, rt: Runtime, batch):
+    period, n_periods, tail = _counts(cfg)
+    w = cfg.hybrid.lru_width or cfg.d_model
+
+    def one_period():
+        c = {}
+        for i, kind in enumerate(cfg.hybrid.pattern):
+            if kind == "attn":
+                c[f"b{i}"] = window_cache_init(batch, cfg, rt)
+            else:
+                c[f"b{i}"] = {
+                    "lru_state": jnp.zeros((batch, w), jnp.float32),
+                    "conv_state": jnp.zeros((batch, 3, w), jnp.float32),
+                }
+        return c
+
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_periods,) + a.shape), one_period()
+    )
+    tails = {
+        f"tail{t}": {
+            "lru_state": jnp.zeros((batch, w), jnp.float32),
+            "conv_state": jnp.zeros((batch, 3, w), jnp.float32),
+        }
+        for t in range(tail)
+    }
+    return {"periods": stacked, **tails}
+
+
+def hybrid_backbone(params, x, cfg, rt: Runtime, positions, caches=None, cache_pos=None):
+    cb = params.get("codebooks")
+    period, n_periods, tail = _counts(cfg)
+
+    def body(carry, xs):
+        h = carry
+        p_period, cache_period = xs
+        new_cache = {}
+        for i, kind in enumerate(cfg.hybrid.pattern):
+            cl = cache_period[f"b{i}"] if cache_period is not None else None
+            if kind == "attn":
+                h, nc = attn_block(h, p_period[f"b{i}"], cfg, rt, cb, positions, cl, cache_pos)
+            else:
+                h, nc = rec_block(h, p_period[f"b{i}"], cfg, rt, cb, cl)
+            if cache_period is not None:
+                new_cache[f"b{i}"] = nc
+        return h, (new_cache if cache_period is not None else None)
+
+    body_fn = layers.maybe_remat(body, rt)
+    cache_periods = caches["periods"] if caches is not None else None
+    x, new_periods = jax.lax.scan(
+        body_fn, x, (params["periods"], cache_periods),
+        unroll=n_periods if rt.unroll else 1,
+    )
+    new_caches = {"periods": new_periods} if caches is not None else None
+    for t in range(tail):
+        cl = caches[f"tail{t}"] if caches is not None else None
+        x, nc = rec_block(x, params[f"tail{t}"], cfg, rt, cb, cl)
+        if caches is not None:
+            new_caches[f"tail{t}"] = nc
+    x = layers.norm_apply(x, params["ln_f"], cfg.norm)
+    return x, new_caches
+
+
+def forward_train(params, batch, cfg: ArchConfig, rt: Runtime):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = transformer.embed_tokens(params, tokens, rt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _ = hybrid_backbone(params, x, cfg, rt, positions)
+    return transformer.xent_loss(params, x, batch["labels"], rt, batch.get("mask"))
+
+
+def prefill(params, batch, cfg: ArchConfig, rt: Runtime, max_len=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    caches = hybrid_cache_init(cfg, rt, b)
+    x = transformer.embed_tokens(params, tokens, rt)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    # prefill runs the parallel path per block, then decode continues from
+    # states; window cache is filled by replaying the last `window` tokens.
+    x, caches = hybrid_backbone(params, x, cfg, rt, positions, caches, cache_pos=0)
+    return transformer.lm_logits(params, x[:, -1:, :], rt), caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime):
+    b, s = tokens.shape
+    x = transformer.embed_tokens(params, tokens, rt)
+    positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, caches = hybrid_backbone(params, x, cfg, rt, positions, caches, cache_pos=pos)
+    return transformer.lm_logits(params, x, rt), caches

@@ -1,0 +1,604 @@
+"""Shared model primitives: norms, RoPE, quantized dense, GQA attention,
+MLPs, KV caches (bf16 / int8 / packed-BCQ4).
+
+Everything is functional: ``init_*`` builds param dicts; apply functions are
+pure.  Quantization is threaded via ``Runtime`` (static) + codebooks (traced
+array living in the param tree), so a single model definition serves:
+
+  quant_mode='none'      bf16 baseline,
+  quant_mode='fake'      W4A4 serving: acts quantized on the fly, weights
+                         PTQ'd offline (paper §4.1 fn.3 emulation),
+  quant_mode='fake_full' also quantizes weights in-graph,
+  quant_mode='packed'    weights stored as packed 4-bit buffers and decoded
+                         in-graph (true-storage serving path; on TPU the
+                         Pallas kernels of kernels/ implement the same math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bcq, formats
+from repro.core.bcq import BCQConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Static per-run model configuration (hashable → jit-static)."""
+
+    # none      — bf16 baseline
+    # fake      — W4A4 serving: activations quantize-dequantize on the fly;
+    #             weights are PTQ'd *offline* (core/ptq.py) so carry no
+    #             in-graph quantization ops (the paper's deployment)
+    # fake_full — also quantize weights in-graph (calibration/ablation runs)
+    # packed    — weights stored as packed 4-bit buffers, decoded in-graph
+    quant_mode: str = "none"
+    bcq_cfg: BCQConfig = BCQConfig()
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    cache_kind: str = "bf16"  # bf16 | int8 | bcq4
+    attn_chunk: int = 1024  # query-chunked attention block
+    remat: bool = False
+    logit_chunk: int = 0  # 0 = unchunked loss
+    # Fully unroll every scan/map (dry-run only): XLA's HloCostAnalysis
+    # counts while-loop bodies once, so unrolled lowering is what makes
+    # cost_analysis FLOPs/bytes exact for the roofline.
+    unroll: bool = False
+    # on-the-fly activation quantizer for 'fake'/'fake_full' modes:
+    # bcq (paper) | mx4 | mxfp4 | vsq | int4 — enables honest W4A4
+    # baseline comparisons (Table 2/6)
+    act_format: str = "bcq"
+    # remat policy when remat=True: 'full' (save nothing) | 'dots' (save
+    # GEMM outputs — avoids re-running the FSDP weight all-gathers in bwd)
+    remat_policy: str = "full"
+    # sequence-sharded exact-softmax decode attention (shard_map over the
+    # 'model' axis): replaces XLA's KV-cache all-gather with tiny
+    # pmax/psum partials — the §Perf lever for full-MHA decode
+    flash_decode: bool = False
+    # f32 attention scores (default, safest) vs bf16 scores with f32
+    # softmax reduction — halves the dominant prefill score traffic
+    attn_f32: bool = True
+    # route self-attention through the Pallas flash kernel
+    # (kernels/flash_attention.py): O(S·d) HBM instead of O(S²) scores.
+    # interpret-mode on CPU (tests); native on TPU.  Causal, no window.
+    flash_kernel: bool = False
+    mesh: Any = None  # required (hashable) when flash_decode is set
+
+
+# ------------------------------------------------------------------- init
+def uinit(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / max(shape[0], 1)) ** 0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_dense(key, d_in, d_out, bias=False, dtype=jnp.float32):
+    p = {"kernel": uinit(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(d, kind="rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["nbias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------ norms
+def norm_apply(x, p, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "nbias" in p:
+        y = y + p["nbias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------- quantized dense
+def _fq(x, cb, cfg):
+    """Fake-quant activations/weights along the last (reduction) axis."""
+    return bcq.fake_quant(x, cb, cfg)
+
+
+def _quantize_act(x, rt: "Runtime", cb):
+    """On-the-fly activation quantization per rt.act_format
+    ('none' = weight-only W4A16, paper Table 4)."""
+    if rt.act_format == "none":
+        return x
+    if rt.act_format == "bcq":
+        return _fq(x, cb, rt.bcq_cfg)
+    from repro.core import baselines as B
+
+    fn = {
+        "mx4": B.mx_quantize,
+        "mxfp4": B.mxfp4_quantize,
+        "vsq": B.vsq_quantize,
+        "int4": lambda v: B.int_pertensor(v, 4),
+    }[rt.act_format]
+    return fn(x)
+
+
+def decode_packed_weight(pk: dict, cfg: BCQConfig, cb: jax.Array) -> jax.Array:
+    """In-graph dequant of a packed (..., N, K) weight: storage stays 4-bit
+    in HBM; decode is gather + multiply (the jnp analogue of the Pallas
+    decode-GEMM's VMEM stage)."""
+    idx = bcq.unpack_nibbles(pk["idx"]).astype(jnp.int32)  # (..., N, K)
+    k = idx.shape[-1]
+    nb = k // cfg.block_len
+    sel = bcq.unpack_nibbles(pk["sel"]).astype(jnp.int32)[..., :nb]
+    ratio = formats.bits_to_e4m3(pk["scale"])  # (N, K/L_A)
+    flat = cb.reshape(-1)
+    sel_s = jnp.repeat(sel, cfg.block_len, axis=-1)
+    vals = flat[sel_s * cfg.n_entries + idx]
+    inv = jnp.repeat(1.0 / (ratio * pk["s_x"]), cfg.array_len, axis=-1)
+    return vals * inv  # f32 (..., N, K)
+
+
+def pack_weight(w: jax.Array, cfg: BCQConfig, cb: jax.Array) -> dict:
+    """Offline PTQ: (K, N) kernel → packed dict (blocks along K)."""
+    wt = jnp.asarray(w).T.astype(jnp.float32)  # (N, K)
+    enc = bcq.encode(wt, cb, cfg)
+    return {
+        "idx": enc.packed_idx,
+        "sel": enc.packed_sel,
+        "scale": enc.scale_code,
+        "s_x": enc.s_x,
+    }
+
+
+def packed_weight_shapes(d_in: int, d_out: int, cfg: BCQConfig) -> dict:
+    """ShapeDtypeStructs of a packed (d_in→d_out) kernel (for dry-runs)."""
+    n, k = d_out, d_in
+    return {
+        "idx": jax.ShapeDtypeStruct((n, k // 2), jnp.uint8),
+        "sel": jax.ShapeDtypeStruct((n, k // (2 * cfg.block_len)), jnp.uint8),
+        "scale": jax.ShapeDtypeStruct((n, k // cfg.array_len), jnp.uint8),
+        "s_x": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+
+
+def qdense_shared(x, ps: list, rt: Runtime, cb):
+    """Several linear heads over the SAME input (QKV, MLP wi/wg): quantize
+    the activation ONCE and reuse — bit-identical to per-head quantization
+    (same xq), but 1× instead of N× encode cost/traffic."""
+    if rt.quant_mode in ("fake", "fake_full", "packed") and cb is not None:
+        xq = _quantize_act(x.astype(jnp.float32), rt, cb)
+        rt = dataclasses.replace(rt, act_format="_pre_quantized")
+        x = xq
+    return [qdense(x, p, rt, cb) for p in ps]
+
+
+def qdense(x, p, rt: Runtime, cb: Optional[jax.Array]):
+    """Linear layer honoring rt.quant_mode.  x: (..., K); kernel (K, N)."""
+    dt = rt.compute_dtype
+    if rt.act_format == "_pre_quantized" and rt.quant_mode != "none" and cb is not None:
+        # input already quantized by qdense_shared
+        if rt.quant_mode in ("fake", "fake_full"):
+            wk = p["kernel"].astype(dt)
+            if rt.quant_mode == "fake_full":
+                wk = _fq(p["kernel"].astype(jnp.float32).T, cb, rt.bcq_cfg).astype(dt).T
+            y = jnp.einsum("...k,kn->...n", x.astype(dt), wk)
+        else:
+            w = decode_packed_weight(p["kernel_packed"], rt.bcq_cfg, cb).astype(dt)
+            y = jnp.einsum("...k,nk->...n", x.astype(dt), w)
+        if "bias" in p:
+            y = y + p["bias"].astype(y.dtype)
+        return y
+    if rt.quant_mode == "none" or cb is None:
+        y = jnp.einsum("...k,kn->...n", x.astype(dt), p["kernel"].astype(dt))
+    elif rt.quant_mode == "fake":
+        # weights already PTQ'd offline; only activations quantize on the fly
+        xq = _quantize_act(x.astype(jnp.float32), rt, cb)
+        y = jnp.einsum("...k,kn->...n", xq.astype(dt), p["kernel"].astype(dt))
+    elif rt.quant_mode == "fake_full":
+        xq = _quantize_act(x.astype(jnp.float32), rt, cb)
+        wt = p["kernel"].astype(jnp.float32).T  # (N, K): blocks along K
+        wq = _fq(wt, cb, rt.bcq_cfg)
+        y = jnp.einsum("...k,nk->...n", xq.astype(dt), wq.astype(dt))
+    elif rt.quant_mode == "packed":
+        xq = _fq(x.astype(jnp.float32), cb, rt.bcq_cfg).astype(dt)
+        w = decode_packed_weight(p["kernel_packed"], rt.bcq_cfg, cb).astype(dt)
+        y = jnp.einsum("...k,nk->...n", xq, w)
+    else:
+        raise ValueError(rt.quant_mode)
+    if "bias" in p:
+        y = y + p["bias"].astype(y.dtype)
+    return y
+
+
+def init_qdense(key, d_in, d_out, rt: Runtime, bias=False):
+    """Init respecting quant_mode: packed mode stores 4-bit buffers."""
+    if rt.quant_mode == "packed":
+        p = {
+            "kernel_packed": {
+                k: jnp.zeros(s.shape, s.dtype)
+                for k, s in packed_weight_shapes(d_in, d_out, rt.bcq_cfg).items()
+            }
+        }
+        if bias:
+            p["bias"] = jnp.zeros((d_out,), rt.param_dtype)
+        return p
+    return init_dense(key, d_in, d_out, bias, rt.param_dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) absolute indices."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- KV caches
+def _cache_cfg(cfg: BCQConfig, d_head: int) -> BCQConfig:
+    """BCQ config for per-head-vector cache quantization: the array length
+    shrinks to d_head when d_head < L_A (small smoke heads)."""
+    if d_head % cfg.array_len == 0:
+        return cfg
+    la = min(cfg.array_len, d_head)
+    assert la % cfg.block_len == 0 and d_head % la == 0
+    return dataclasses.replace(cfg, array_len=la)
+
+
+def cache_init(batch, seq, n_kv, d_head, kind, cfg: BCQConfig, dtype=jnp.bfloat16):
+    """Empty cache leaves for ONE layer (zoo stacks over layers)."""
+    if kind == "bf16":
+        z = jnp.zeros((batch, seq, n_kv, d_head), dtype)
+        return {"k": z, "v": z}
+    if kind == "int8":
+        z = jnp.zeros((batch, seq, n_kv, d_head), jnp.int8)
+        s = jnp.zeros((batch, seq, n_kv), jnp.float32)
+        return {"k": z, "v": z, "k_scale": s, "v_scale": s}
+    if kind == "bcq4":
+        cfg = _cache_cfg(cfg, d_head)
+        return {
+            "k_idx": jnp.zeros((batch, seq, n_kv, d_head // 2), jnp.uint8),
+            "v_idx": jnp.zeros((batch, seq, n_kv, d_head // 2), jnp.uint8),
+            "k_sel": jnp.zeros((batch, seq, n_kv, d_head // (2 * cfg.block_len)), jnp.uint8),
+            "v_sel": jnp.zeros((batch, seq, n_kv, d_head // (2 * cfg.block_len)), jnp.uint8),
+            "k_scale": jnp.zeros((batch, seq, n_kv, max(d_head // cfg.array_len, 1)), jnp.uint8),
+            "v_scale": jnp.zeros((batch, seq, n_kv, max(d_head // cfg.array_len, 1)), jnp.uint8),
+            "k_sx": jnp.ones((), jnp.float32),
+            "v_sx": jnp.ones((), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _cache_quant_int8(x):
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.where(s == 0, 1.0, s)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def cache_write(cache, k_new, v_new, pos, kind, cfg: BCQConfig, cb):
+    """Insert (B, S_new, H, D) keys/values at offset ``pos`` (scalar)."""
+
+    def put(buf, val):
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, pos, 0, 0)
+        )
+
+    if kind == "bf16":
+        return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+    if kind == "int8":
+        kq, ks = _cache_quant_int8(k_new)
+        vq, vs = _cache_quant_int8(v_new)
+        return {
+            "k": put(cache["k"], kq),
+            "v": put(cache["v"], vq),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, pos, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, pos, 0)),
+        }
+    if kind == "bcq4":
+        cfg = _cache_cfg(cfg, k_new.shape[-1])
+        out = dict(cache)
+        for nm, val, sx in (("k", k_new, cache["k_sx"]), ("v", v_new, cache["v_sx"])):
+            enc = bcq.encode(val.astype(jnp.float32), cb, cfg, s_x=sx)
+            out[f"{nm}_idx"] = put(out[f"{nm}_idx"], enc.packed_idx)
+            out[f"{nm}_sel"] = put(out[f"{nm}_sel"], enc.packed_sel)
+            out[f"{nm}_scale"] = put(out[f"{nm}_scale"], enc.scale_code)
+        return out
+    raise ValueError(kind)
+
+
+def cache_read(cache, kind, cfg: BCQConfig, cb, dtype):
+    """Dequantize full cache → (k, v) in compute dtype."""
+    if kind == "bf16":
+        return cache["k"].astype(dtype), cache["v"].astype(dtype)
+    if kind == "int8":
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+        return k.astype(dtype), v.astype(dtype)
+    if kind == "bcq4":
+        outs = []
+        for nm in ("k", "v"):
+            idx = bcq.unpack_nibbles(cache[f"{nm}_idx"]).astype(jnp.int32)
+            d = idx.shape[-1]
+            cfg = _cache_cfg(cfg, d)
+            nb = d // cfg.block_len
+            sel = bcq.unpack_nibbles(cache[f"{nm}_sel"]).astype(jnp.int32)[..., :nb]
+            ratio = formats.bits_to_e4m3(cache[f"{nm}_scale"])
+            # unwritten slots hold ratio == 0 → decode to 0, not inf
+            inv_r = jnp.where(ratio > 0, 1.0 / (ratio * cache[f"{nm}_sx"]), 0.0)
+            flat = cb.reshape(-1)
+            vals = flat[jnp.repeat(sel, cfg.block_len, -1) * cfg.n_entries + idx]
+            inv = jnp.repeat(inv_r, cfg.array_len, -1)
+            outs.append((vals * inv).astype(dtype))
+        return outs[0], outs[1]
+    raise ValueError(kind)
+
+
+def cache_sx_calibrate(cache, k_sample, v_sample, kind, cfg: BCQConfig):
+    """Set per-tensor cache scales from the prefill K/V (bcq4 only)."""
+    if kind != "bcq4":
+        return cache
+    out = dict(cache)
+    out["k_sx"] = bcq.tensor_scale(k_sample.astype(jnp.float32), cfg)
+    out["v_sx"] = bcq.tensor_scale(v_sample.astype(jnp.float32), cfg)
+    return out
+
+
+def maybe_remat(fn, rt: Runtime):
+    if not rt.remat:
+        return fn
+    pol = None
+    if rt.remat_policy == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+def flash_decode_sharded(q, kf, vf, valid, rt: Runtime):
+    """Exact-softmax decode attention with the KV sequence sharded over the
+    'model' mesh axis.  Per shard: local scores → running (max, sum, acc);
+    cross-shard combine via pmax + two psums of (B, H[, D]) — O(MBs)
+    instead of all-gathering the multi-GiB KV cache.
+
+    q: (B, 1, H, D) replicated over 'model'; kf/vf: (B, S, Hkv, D) with S
+    sharded; valid: traced scalar (# valid cache slots)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rt.mesh
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b, sq, h, d = q.shape
+    skv, hkv = kf.shape[1], kf.shape[2]
+    if sq != 1 or "model" not in axes or skv % axes["model"]:
+        return None  # caller falls back to the gathered path
+    dax = "data" if b % axes.get("data", 1) == 0 and "data" in axes else None
+    qs = P(dax, None, None, None)
+    kvs = P(dax, "model", None, None)
+
+    def core(qb, kb, vb, vd):
+        rep = h // hkv
+        kx = jnp.repeat(kb, rep, 2) if rep > 1 else kb
+        vx = jnp.repeat(vb, rep, 2) if rep > 1 else vb
+        s_loc = jnp.einsum(
+            "bqhd,bkhd->bhqk", qb.astype(jnp.float32), kx.astype(jnp.float32)
+        ) * (d ** -0.5)
+        sl = kb.shape[1]
+        j = jax.lax.axis_index("model") * sl + jnp.arange(sl)
+        mask = j[None, None, None, :] < vd
+        s_loc = jnp.where(mask, s_loc, -1e30)
+        m_loc = jnp.max(s_loc, axis=-1)  # (B, H, 1)
+        m = jax.lax.pmax(m_loc, "model")
+        p = jnp.exp(s_loc - m[..., None])
+        l = jax.lax.psum(jnp.sum(p, -1), "model")  # (B, H, 1)
+        acc = jax.lax.psum(
+            jnp.einsum("bhqk,bkhd->bqhd", p, vx.astype(jnp.float32)), "model"
+        )
+        return acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+
+    out = shard_map(
+        core, mesh=mesh, in_specs=(qs, kvs, kvs, P()), out_specs=qs,
+        check_rep=False,
+    )(q, kf, vf, jnp.asarray(valid))
+    return out.astype(q.dtype)
+
+
+def cache_write_sharded(cache, k_new, v_new, pos, rt: Runtime, cb):
+    """Decode-step cache insert with the sequence dim sharded over 'model'.
+
+    A plain dynamic-update-slice at a *traced* position into a sharded dim
+    makes XLA SPMD replicate (all-gather) the whole cache — the dominant
+    collective in full-MHA decode.  Instead, quantize the new token tile,
+    then let the owning shard update locally: owner = pos // shard_len,
+    local offset = pos % shard_len, others pass through.  Zero collectives.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rt.mesh
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mp = axes.get("model", 1)
+    # quantize the (B, 1, H, D) token via a length-1 staging cache
+    b = k_new.shape[0]
+    stage = cache_init(b, 1, k_new.shape[2], k_new.shape[3], rt.cache_kind, rt.bcq_cfg)
+    for n in ("k_sx", "v_sx"):
+        if n in cache:
+            stage[n] = cache[n]
+    new_vals = cache_write(stage, k_new, v_new, 0, rt.cache_kind, rt.bcq_cfg, cb)
+
+    out = {}
+    for n, buf in cache.items():
+        if buf.ndim < 2 or buf.shape[1] % mp:
+            out[n] = new_vals.get(n, buf) if buf.ndim < 2 else buf
+            continue
+        val = new_vals[n]
+        shard_len = buf.shape[1] // mp
+        dax = "data" if "data" in axes and buf.shape[0] % axes["data"] == 0 else None
+        tail = [None] * (buf.ndim - 2)
+        bspec = P(dax, "model", *tail)
+        vspec = P(dax, None, *tail)
+
+        def core(bm, vm, p, _sl=shard_len):
+            owner = p // _sl
+            lp = p % _sl
+            upd = jax.lax.dynamic_update_slice(
+                bm, vm.astype(bm.dtype), (0, lp) + (0,) * (bm.ndim - 2)
+            )
+            here = jax.lax.axis_index("model") == owner
+            return jnp.where(here.reshape((1,) * bm.ndim), upd, bm)
+
+        out[n] = shard_map(
+            core, mesh=mesh, in_specs=(bspec, vspec, P()), out_specs=bspec,
+            check_rep=False,
+        )(buf, val, jnp.asarray(pos))
+    return out
+
+
+def scan_layers(body, carry, xs, unroll_flag: bool, length=None):
+    """lax.scan wrapper honoring Runtime.unroll (full unroll for dry-runs)."""
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, carry, xs, unroll=length if unroll_flag else 1)
+
+
+# ---------------------------------------------------------------- attention
+def _attend_chunked(q, k, v, q_pos, kv_valid_len, causal, window, chunk, unroll=False, score_f32=True):
+    """Exact softmax attention, scanned over query chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D); q_pos: (B, Sq) absolute
+    positions; kv position j is absolute index j.  Masks: j <= pos (causal),
+    pos - j < window (local), j < kv_valid_len.
+    Memory per chunk: B·H·chunk·Sk — never the full Sq×Sk score matrix.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    kx = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vx = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    scale = d ** -0.5
+    j_idx = jnp.arange(sk)
+
+    sdt = jnp.float32 if score_f32 else jnp.bfloat16
+    neg = -1e30 if score_f32 else -3e38
+
+    def one_chunk(args):
+        qc, pc = args  # (B, C, H, D), (B, C)
+        s = jnp.einsum("bchd,bkhd->bhck", qc.astype(sdt), kx.astype(sdt))
+        s = s * jnp.asarray(scale, sdt)
+        m = j_idx[None, None, None, :] < kv_valid_len
+        if causal:
+            m = m & (j_idx[None, None, None, :] <= pc[:, None, :, None])
+        if window:
+            m = m & (pc[:, None, :, None] - j_idx[None, None, None, :] < window)
+        s = jnp.where(m, s, jnp.asarray(neg, sdt))
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(sdt)
+        return jnp.einsum("bhck,bkhd->bchd", p, vx.astype(sdt)).astype(jnp.float32)
+
+    while chunk > 1 and sq % chunk:  # largest divisor ≤ requested chunk
+        chunk //= 2
+    if sq <= chunk or sq % chunk:
+        out = one_chunk((q, q_pos))
+    else:
+        n = sq // chunk
+        qs = q.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
+        ps = q_pos.reshape(b, n, chunk).transpose(1, 0, 2)
+        _, out = jax.lax.scan(
+            lambda c, xs: (c, one_chunk(xs)), None, (qs, ps),
+            unroll=n if unroll else 1,
+        )
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def init_attention(key, cfg, rt: Runtime):
+    ks = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    return {
+        "wq": init_qdense(ks[0], cfg.d_model, cfg.n_heads * hd, rt, bias=cfg.qkv_bias),
+        "wk": init_qdense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, rt, bias=cfg.qkv_bias),
+        "wv": init_qdense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, rt, bias=cfg.qkv_bias),
+        "wo": init_qdense(ks[3], cfg.n_heads * hd, cfg.d_model, rt),
+    }
+
+
+def attention(
+    x,
+    p,
+    cfg,
+    rt: Runtime,
+    cb,
+    positions,
+    cache=None,
+    cache_pos=None,
+    causal=True,
+    window=None,
+    kv_override=None,
+    use_rope=True,
+):
+    """GQA attention.  With ``cache``: read-modify-write decode/prefill path
+    (returns (out, new_cache)); without: self-attention over x itself.
+    ``kv_override``: (k, v) for cross-attention (enc-dec)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    if kv_override is None:
+        q, k, v = qdense_shared(x, [p["wq"], p["wk"], p["wv"]], rt, cb)
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        k = k.reshape(b, s, cfg.n_kv_heads, hd)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd)
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+    else:
+        q = qdense(x, p["wq"], rt, cb).reshape(b, s, cfg.n_heads, hd)
+        k, v = kv_override
+
+    new_cache = None
+    if cache is not None:
+        use_flash = rt.flash_decode and rt.mesh is not None and s == 1 and window is None
+        if use_flash:
+            new_cache = cache_write_sharded(cache, k, v, cache_pos, rt, cb)
+        else:
+            new_cache = cache_write(cache, k, v, cache_pos, rt.cache_kind, rt.bcq_cfg, cb)
+        kf, vf = cache_read(new_cache, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype)
+        valid = cache_pos + s
+        out = None
+        if use_flash:
+            out = flash_decode_sharded(q, kf, vf, valid, rt)
+        if out is None:
+            out = _attend_chunked(q, kf, vf, positions, valid, causal, window, rt.attn_chunk, rt.unroll, rt.attn_f32)
+    else:
+        valid = k.shape[1]
+        if rt.flash_kernel and causal and window is None and s == k.shape[1]:
+            from repro.kernels.flash_attention import flash_attention
+
+            out = flash_attention(q, k, v, causal=True).astype(q.dtype)
+        else:
+            out = _attend_chunked(q, k, v, positions, valid, causal, window, rt.attn_chunk, rt.unroll, rt.attn_f32)
+    out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------- MLPs
+def init_mlp(key, d_model, d_ff, act, rt: Runtime):
+    ks = jax.random.split(key, 3)
+    p = {"wi": init_qdense(ks[0], d_model, d_ff, rt), "wo": init_qdense(ks[1], d_ff, d_model, rt)}
+    if act == "swiglu":
+        p["wg"] = init_qdense(ks[2], d_model, d_ff, rt)
+    return p
+
+
+def mlp(x, p, act, rt: Runtime, cb):
+    if act == "swiglu":
+        h, g = qdense_shared(x, [p["wi"], p["wg"]], rt, cb)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = qdense(x, p["wi"], rt, cb)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return qdense(h, p["wo"], rt, cb)

@@ -1,0 +1,268 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) block.
+
+Chunked train/prefill path: intra-chunk "attention-like" term + inter-chunk
+linear recurrence carried by an associative scan (parallel over sequence —
+the construct sequence-parallelism shards).  O(1)-state decode path for
+serving.  The in/out projections are GEMMs and follow rt.quant_mode; the
+recurrence itself has no weight GEMM, so LO-BCQ is inapplicable there
+(DESIGN.md §5) and it stays in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Runtime, init_qdense, qdense
+
+
+def _segsum(x):
+    """x: (..., L) → (..., L, L) lower-tri cumulative sums Σ_{j<i≤k} x_i."""
+    l = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    d = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def init_ssm(key, cfg, rt: Runtime):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    h = di // s.head_dim
+    conv_ch = di + 2 * s.d_state  # x, B, C share the causal conv (g=1)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_qdense(ks[0], d, 2 * di + 2 * s.d_state + h, rt),
+        "conv_kernel": layers.uinit(ks[1], (s.d_conv, conv_ch), scale=0.5, dtype=rt.param_dtype),
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": init_qdense(ks[2], di, d, rt),
+        "gnorm": layers.init_norm(di, "rmsnorm", rt.param_dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * s.d_state], axis=-1)
+    return z, xbc, dt, di, h
+
+
+def _causal_conv(xbc, kernel, state=None):
+    """Depthwise causal conv, window K.  state: (B, K-1, C) history or None."""
+    k = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i : i + xbc.shape[1], :] * kernel[i][None, None, :] for i in range(k))
+    new_state = xp[:, xp.shape[1] - (k - 1) :, :]
+    return jax.nn.silu(out.astype(jnp.float32)), new_state
+
+
+def ssd_chunked(x, dt, a, b_in, c_in, chunk):
+    """SSD scan.  x: (B,S,H,P) (dt folded in by caller), dt: (B,S,H),
+    a: (H,) negative, b_in/c_in: (B,S,N).  Returns (y (B,S,H,P),
+    final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]  # (B, nc, Q, H)
+    da_t = da.transpose(0, 1, 3, 2)  # (B, nc, H, Q)
+    da_cum = jnp.cumsum(da_t, axis=-1)
+
+    # 1. intra-chunk (quadratic within the chunk)
+    l_mat = jnp.exp(_segsum(da_t))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)  # (B, nc, Q, Q)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", scores, l_mat, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)  # (B, nc, H, Q)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence S_c = exp(Σda_c)·S_{c-1} + states_c
+    chunk_decay = jnp.exp(da_cum[..., -1])  # (B, nc, H)
+
+    def combine(lhs, rhs):
+        dl, tl = lhs
+        dr, tr = rhs
+        return dl * dr, tr + dr[..., None, None] * tl
+
+    dscan, sscan = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1
+    )
+    prev = jnp.concatenate(
+        [jnp.zeros_like(sscan[:, :1]), sscan[:, :-1]], axis=1
+    )  # state entering each chunk
+
+    # 4. inter-chunk contribution
+    state_decay = jnp.exp(da_cum)  # (B, nc, H, Q)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cc, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, sscan[:, -1]  # final state (B, H, P, N)
+
+
+def ssm_block(x, p, cfg, rt: Runtime, cb, cache=None):
+    """x: (B, S, D).  cache: {'ssm_state', 'conv_state'} for decode (S small)
+    or None for train/prefill.  Returns (y, new_cache_or_final_state)."""
+    s_cfg = cfg.ssm
+    bsz, s, _ = x.shape
+    zxbcdt = qdense(x, p["in_proj"], rt, cb)
+    z, xbc, dt_raw, di, h = _split_proj(zxbcdt, cfg)
+    conv_state = cache["conv_state"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_kernel"].astype(jnp.float32), conv_state)
+    xs, b_in, c_in = jnp.split(xbc, [di, di + s_cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    xh = xs.reshape(bsz, s, h, s_cfg.head_dim).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+
+    if cache is None:
+        chunk = min(s_cfg.chunk, s)
+        while s % chunk:
+            chunk //= 2
+        y, final_state = ssd_chunked(xdt, dt, a, b_in.astype(jnp.float32), c_in.astype(jnp.float32), chunk)
+        new_cache = {"ssm_state": final_state, "conv_state": new_conv}
+    else:
+        # recurrent decode: steps over S (S == 1 in serving)
+        state = cache["ssm_state"]  # (B, H, P, N)
+
+        def step(st, inp):
+            xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,N),(B,N)
+            decay = jnp.exp(dtt * a[None, :])  # (B,H)
+            st = st * decay[..., None, None] + jnp.einsum("bhp,bn->bhpn", xt, bt)
+            yt = jnp.einsum("bhpn,bn->bhp", st, ct)
+            return st, yt
+
+        inps = (
+            xdt.transpose(1, 0, 2, 3),
+            dt.transpose(1, 0, 2),
+            b_in.astype(jnp.float32).transpose(1, 0, 2),
+            c_in.astype(jnp.float32).transpose(1, 0, 2),
+        )
+        state, ys = jax.lax.scan(step, state, inps)
+        y = ys.transpose(1, 0, 2, 3)
+        new_cache = {"ssm_state": state, "conv_state": new_conv}
+
+    y = y + xh * p["D"][None, None, :, None]  # skip connection
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))  # gate
+    y = layers.norm_apply(y.astype(rt.compute_dtype), p["gnorm"], "rmsnorm")
+    return qdense(y, p["out_proj"], rt, cb), new_cache
+
+
+def ssm_cache_init(batch, cfg, rt: Runtime):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    h = di // s.head_dim
+    return {
+        "ssm_state": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------- full SSM LM
+def init_block(key, cfg, rt: Runtime):
+    return {
+        "ln": layers.init_norm(cfg.d_model, "rmsnorm", rt.param_dtype),
+        "mixer": init_ssm(key, cfg, rt),
+    }
+
+
+def init_ssm_lm(key, cfg, rt: Runtime):
+    from repro.models import transformer
+
+    params = transformer.init_embed(key, cfg, rt)
+    lkeys = jax.random.split(jax.random.fold_in(key, 2), cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_block(k, cfg, rt))(lkeys)
+    params["ln_f"] = layers.init_norm(cfg.d_model, "rmsnorm", rt.param_dtype)
+    if rt.quant_mode != "none":
+        params["codebooks"] = jnp.zeros(
+            (rt.bcq_cfg.n_codebooks, rt.bcq_cfg.n_entries), jnp.float32
+        )
+    return params
+
+
+def ssm_backbone(params, x, cfg, rt: Runtime, caches=None):
+    cb = params.get("codebooks")
+
+    def body(h, xs):
+        p_layer, cache_layer = xs
+        hh = layers.norm_apply(h, p_layer["ln"], "rmsnorm")
+        out, new_cache = ssm_block(hh, p_layer["mixer"], cfg, rt, cb, cache_layer)
+        return h + out, (new_cache if cache_layer is not None else None)
+
+    body_fn = layers.maybe_remat(body, rt)
+    x, new_caches = jax.lax.scan(
+        body_fn, x, (params["layers"], caches),
+        unroll=cfg.n_layers if rt.unroll else 1,
+    )
+    x = layers.norm_apply(x, params["ln_f"], "rmsnorm")
+    return x, (new_caches if caches is not None else None)
+
+
+def forward_train(params, batch, cfg, rt: Runtime):
+    from repro.models import transformer
+
+    x = transformer.embed_tokens(params, batch["tokens"], rt)
+    x, _ = ssm_backbone(params, x, cfg, rt)
+    return transformer.xent_loss(params, x, batch["labels"], rt, batch.get("mask"))
+
+
+def ssm_cache_stacked(cfg, rt: Runtime, batch):
+    one = ssm_cache_init(batch, cfg, rt)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+    )
+
+
+def prefill(params, batch, cfg, rt: Runtime, max_len=None):
+    """Parallel chunked scan over the prompt; caches = final states."""
+    from repro.models import transformer
+
+    b = batch["tokens"].shape[0]
+    caches = ssm_cache_stacked(cfg, rt, b)
+    x = transformer.embed_tokens(params, batch["tokens"], rt)
+    # chunked path also produces the final state when cache is threaded:
+    # run cache-free parallel scan, then recompute final states per layer.
+    # Simpler + exact: run with cache=None semantics but capture states by
+    # passing a cache into the recurrent decode path would be O(S); instead
+    # ssd_chunked already returns final_state, so thread caches through.
+    cb = params.get("codebooks")
+
+    def body(h, xs):
+        p_layer, cache_layer = xs
+        hh = layers.norm_apply(h, p_layer["ln"], "rmsnorm")
+        # parallel path (cache=None) but keep the returned final state
+        out, st = ssm_block(hh, p_layer["mixer"], cfg, rt, cb, None)
+        new_cache = {"ssm_state": st["ssm_state"], "conv_state": st["conv_state"]}
+        return h + out, new_cache
+
+    body_fn = layers.maybe_remat(body, rt)
+    x, new_caches = jax.lax.scan(
+        body_fn, x, (params["layers"], caches),
+        unroll=cfg.n_layers if rt.unroll else 1,
+    )
+    x = layers.norm_apply(x, params["ln_f"], "rmsnorm")
+    logits = transformer.lm_logits(params, x[:, -1:, :], rt)
+    return logits, new_caches
+
+
+def decode_step(params, caches, tokens, pos, cfg, rt: Runtime):
+    from repro.models import transformer
+
+    del pos  # SSM state is position-free
+    x = transformer.embed_tokens(params, tokens, rt)
+    x, new_caches = ssm_backbone(params, x, cfg, rt, caches)
+    logits = transformer.lm_logits(params, x, rt)
+    return logits, new_caches

@@ -1,0 +1,188 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone families).
+
+Layers are scanned (stacked params, one trace per unique block) with
+optional remat; KV caches are stacked along the same leading layer axis so
+prefill/decode also scan.  The VLM family consumes precomputed patch
+embeddings (stub frontend per the assignment) spliced over the first
+``n_patches`` token positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, moe as moe_lib
+from repro.models.layers import Runtime
+
+
+# ----------------------------------------------------------- shared pieces
+def init_embed(key, cfg: ArchConfig, rt: Runtime):
+    p = {"embed": {"kernel": layers.uinit(key, (cfg.vocab_padded, cfg.d_model), scale=0.02, dtype=rt.param_dtype)}}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"kernel": layers.uinit(jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_padded), scale=0.02, dtype=rt.param_dtype)}
+    return p
+
+
+def embed_tokens(params, tokens, rt: Runtime):
+    return params["embed"]["kernel"].astype(rt.compute_dtype)[tokens]
+
+
+def lm_logits(params, x, rt: Runtime):
+    if "lm_head" in params:
+        w = params["lm_head"]["kernel"]
+    else:
+        w = params["embed"]["kernel"].T
+    return jnp.einsum("bsd,dv->bsv", x.astype(rt.compute_dtype), w.astype(rt.compute_dtype))
+
+
+def xent_loss(params, x, labels, rt: Runtime, mask=None):
+    """Next-token cross-entropy, optionally chunked over sequence so the
+    (B, S, V) logits never fully materialize (rt.logit_chunk > 0)."""
+
+    def piece(xc, lc, mc):
+        logits = lm_logits(params, xc, rt).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return jnp.sum(nll), jnp.sum(mc)
+
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    c = rt.logit_chunk
+    s = x.shape[1]
+    if c and s > c and s % c == 0:
+        xs = x.reshape(x.shape[0], s // c, c, -1).swapaxes(0, 1)
+        ls = labels.reshape(labels.shape[0], s // c, c).swapaxes(0, 1)
+        ms = mask.reshape(mask.shape[0], s // c, c).swapaxes(0, 1)
+        _, (tot, cnt) = jax.lax.scan(
+            lambda c, args: (c, piece(*args)), None, (xs, ls, ms),
+            unroll=(s // c) if rt.unroll else 1,
+        )
+        return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+    tot, cnt = piece(x, labels, mask)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------------------ blocks
+def init_block(key, cfg: ArchConfig, rt: Runtime):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+        "attn": layers.init_attention(ks[0], cfg, rt),
+        "ln2": layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg, rt)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, rt)
+    return p
+
+
+def block_apply(x, p, cfg, rt: Runtime, cb, positions, cache=None, cache_pos=None):
+    h = layers.norm_apply(x, p["ln1"], cfg.norm)
+    attn_out, new_cache = layers.attention(
+        h, p["attn"], cfg, rt, cb, positions, cache=cache, cache_pos=cache_pos
+    )
+    x = x + attn_out
+    h = layers.norm_apply(x, p["ln2"], cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        f, aux = moe_lib.moe_ffn(h, p["moe"], cfg, rt, cb)
+    else:
+        f = layers.mlp(h, p["mlp"], cfg.act, rt, cb)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------- full LM
+def init_lm(key, cfg: ArchConfig, rt: Runtime):
+    k_embed, k_layers, k_cb = jax.random.split(key, 3)
+    params = init_embed(k_embed, cfg, rt)
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_block(k, cfg, rt))(lkeys)
+    params["ln_f"] = layers.init_norm(cfg.d_model, cfg.norm, rt.param_dtype)
+    if rt.quant_mode != "none":
+        params["codebooks"] = jnp.zeros(
+            (rt.bcq_cfg.n_codebooks, rt.bcq_cfg.n_entries), jnp.float32
+        )
+    return params
+
+
+def _codebooks(params):
+    return params.get("codebooks")
+
+
+def backbone(params, x, cfg, rt: Runtime, positions, caches=None, cache_pos=None):
+    """Scan the layer stack.  caches: stacked (L, ...) pytree or None."""
+    cb = _codebooks(params)
+
+    def body(carry, xs):
+        h, aux = carry
+        p_layer, cache_layer = xs
+        out, new_cache, a = block_apply(
+            h, p_layer, cfg, rt, cb, positions, cache_layer, cache_pos
+        )
+        return (out, aux + a), new_cache
+
+    body_fn = layers.maybe_remat(body, rt)
+    if caches is None:
+        (x, aux), _ = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], None),
+            unroll=cfg.n_layers if rt.unroll else 1,
+        )
+        new_caches = None
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], caches),
+            unroll=cfg.n_layers if rt.unroll else 1,
+        )
+    x = layers.norm_apply(x, params["ln_f"], cfg.norm)
+    return x, new_caches, aux
+
+
+def forward_train(params, batch, cfg: ArchConfig, rt: Runtime):
+    """batch: {'tokens', 'labels', optional 'patch_embeds'} → scalar loss."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, rt)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _, aux = backbone(params, x, cfg, rt, positions)
+    loss = xent_loss(params, x, batch["labels"], rt, batch.get("mask"))
+    return loss + 0.01 * aux
+
+
+def cache_init_stacked(cfg: ArchConfig, rt: Runtime, batch, max_len):
+    one = layers.cache_init(batch, max_len, cfg.n_kv_heads, cfg.head_dim, rt.cache_kind, rt.bcq_cfg)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+    )
+
+
+def prefill(params, batch, cfg: ArchConfig, rt: Runtime, max_len):
+    """Run the prompt, build caches.  Returns (last-position logits, caches)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    caches = cache_init_stacked(cfg, rt, b, max_len)
+    x = embed_tokens(params, tokens, rt)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jax.lax.dynamic_update_slice(x, batch["patch_embeds"].astype(x.dtype), (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, caches, _ = backbone(params, x, cfg, rt, positions, caches, cache_pos=0)
+    logits = lm_logits(params, x[:, -1:, :], rt)
+    return logits, caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime):
+    """One serving step: tokens (B, 1) at absolute position ``pos`` (traced
+    scalar); caches hold ``pos`` valid entries.  Returns (logits, caches)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, rt)
+    positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, caches, _ = backbone(params, x, cfg, rt, positions, caches, cache_pos=pos)
+    logits = lm_logits(params, x, rt)
+    return logits, caches

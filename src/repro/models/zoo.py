@@ -1,0 +1,277 @@
+"""ArchConfig → model API: init / loss / prefill / decode + input specs +
+sharding rules.
+
+Sharding policy (per-pod mesh ('data', 'model'); multi-pod adds a leading
+'pod' axis that is data-parallel by default):
+
+* GEMM kernels (K, N): FSDP over 'data' on K, TP over 'model' on N — each
+  applied only when the dim divides the axis (else replicated on that dim).
+* embeddings / lm_head: vocab over 'model', d_model over 'data'.
+* MoE expert kernels (E, K, N): EP over 'model' on E, FSDP over 'data' on K.
+* scanned stacks get a leading None (layer axis unsharded).
+* KV caches: batch over 'data'; kv-heads over 'model' when divisible, else
+  the *sequence* dim takes 'model' (e.g. full-MHA 40-head caches).
+* norms / biases / codebooks (≤0.19 KB): replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.layers import Runtime
+
+STACK_TOKENS = ("layers", "periods", "enc_layers", "dec_layers")
+
+# MoE expert-kernel sharding policy: 'fsdp' (default — EP×FSDP, weights
+# gathered over 'data' per use) or 'tp2d' (EP×TP — activations reduced
+# instead).  Toggled by the dry-run hillclimb.
+MOE_EXPERT_SPEC = "fsdp"
+
+# Param layout: 'fsdp' (training default — ZeRO-3 over 'data' + TP over
+# 'model') or 'tp' (serving — TP-only, params replicated over 'data' so no
+# per-step weight all-gathers; valid when bf16 params/16 fit HBM).
+PARAM_LAYOUT = "fsdp"
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ArchConfig
+    rt: Runtime
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, dict], jax.Array]
+    prefill_fn: Callable[..., Any]
+    decode_fn: Callable[..., Any]
+    cache_init: Callable[..., Any]
+
+
+def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelAPI(
+            cfg, rt,
+            init=lambda k: transformer.init_lm(k, cfg, rt),
+            loss_fn=lambda p, b: transformer.forward_train(p, b, cfg, rt),
+            prefill_fn=lambda p, b, ml: transformer.prefill(p, b, cfg, rt, ml),
+            decode_fn=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg, rt),
+            cache_init=lambda bsz, ml: transformer.cache_init_stacked(cfg, rt, bsz, ml),
+        )
+    if fam == "ssm":
+        return ModelAPI(
+            cfg, rt,
+            init=lambda k: ssm.init_ssm_lm(k, cfg, rt),
+            loss_fn=lambda p, b: ssm.forward_train(p, b, cfg, rt),
+            prefill_fn=lambda p, b, ml: ssm.prefill(p, b, cfg, rt, ml),
+            decode_fn=lambda p, c, t, pos: ssm.decode_step(p, c, t, pos, cfg, rt),
+            cache_init=lambda bsz, ml: ssm.ssm_cache_stacked(cfg, rt, bsz),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg, rt,
+            init=lambda k: hybrid.init_hybrid(k, cfg, rt),
+            loss_fn=lambda p, b: hybrid.forward_train(p, b, cfg, rt),
+            prefill_fn=lambda p, b, ml: hybrid.prefill(p, b, cfg, rt, ml),
+            decode_fn=lambda p, c, t, pos: hybrid.decode_step(p, c, t, pos, cfg, rt),
+            cache_init=lambda bsz, ml: hybrid.hybrid_cache_init(cfg, rt, bsz),
+        )
+    if fam == "encdec":
+        return ModelAPI(
+            cfg, rt,
+            init=lambda k: encdec.init_encdec(k, cfg, rt),
+            loss_fn=lambda p, b: encdec.forward_train(p, b, cfg, rt),
+            prefill_fn=lambda p, b, ml: encdec.prefill(p, b, cfg, rt, ml),
+            decode_fn=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg, rt),
+            cache_init=None,  # produced by prefill (needs enc output)
+        )
+    raise ValueError(fam)
+
+
+# ------------------------------------------------------------ input specs
+def input_specs(cfg: ArchConfig, rt: Runtime, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), tok),
+            "labels": jax.ShapeDtypeStruct((b, s), tok),
+        }
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), tok)}
+
+
+def cache_specs(cfg: ArchConfig, rt: Runtime, shape: ShapeConfig):
+    """ShapeDtypeStructs of the serving cache for decode cells."""
+    api = build(cfg, rt)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        def mk():
+            self_c = transformer.cache_init_stacked(cfg, rt, b, s)
+            hd = cfg.head_dim
+            xkv = (
+                jnp.zeros((cfg.n_layers, b, cfg.encoder_len, cfg.n_kv_heads, hd), rt.compute_dtype),
+                jnp.zeros((cfg.n_layers, b, cfg.encoder_len, cfg.n_kv_heads, hd), rt.compute_dtype),
+            )
+            return {"self": self_c, "xkv": xkv}
+        return jax.eval_shape(mk)
+    return jax.eval_shape(lambda: api.cache_init(b, s))
+
+
+# --------------------------------------------------------- sharding rules
+def _div(n, axes, name):
+    return name in axes and n % axes[name] == 0
+
+
+def _kernel_spec(shape, axes):
+    """(K, N) GEMM kernel → FSDP('data') × TP('model')."""
+    k, n = shape[-2], shape[-1]
+    return (
+        "data" if _div(k, axes, "data") else None,
+        "model" if _div(n, axes, "model") else None,
+    )
+
+
+def _spec_for(path: str, shape, axes) -> P:
+    ndim = len(shape)
+    stacked = any(t in path for t in STACK_TOKENS)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+
+    def wrap(*dims):
+        return P(*(lead + tuple(dims)))
+
+    if "codebooks" in path or ndim == 0:
+        return P()
+    if "embed" in path or "lm_head" in path:
+        v, d = (core[0], core[1]) if core[0] > core[1] else (core[1], core[0])
+        big = "model" if _div(v, axes, "model") else None
+        small = None if PARAM_LAYOUT == "tp" else ("data" if _div(d, axes, "data") else None)
+        if core[0] >= core[1]:
+            return wrap(big, small)
+        return wrap(small, big)
+    if "kernel_packed" in path and len(core) >= 2:
+        # packed buffers: (..., N, K') — TP on N (+ FSDP on K' for training)
+        dims = [None] * len(core)
+        if _div(core[-2], axes, "model"):
+            dims[-2] = "model"
+        if PARAM_LAYOUT != "tp" and _div(core[-1], axes, "data"):
+            dims[-1] = "data"
+        if len(core) == 3 and _div(core[0], axes, "model"):
+            dims[0] = "model"
+            dims[-2] = None
+        return wrap(*dims)
+    if path.endswith("kernel") and "conv" not in path:
+        if PARAM_LAYOUT == "tp" and len(core) == 2 and "router" not in path:
+            return wrap(None, "model" if _div(core[1], axes, "model") else None)
+        if len(core) == 3:  # MoE experts (E, K, N)
+            if PARAM_LAYOUT == "tp" and MOE_EXPERT_SPEC != "tp2d":
+                return wrap("model" if _div(core[0], axes, "model") else None, None, None)
+            if MOE_EXPERT_SPEC == "tp2d":
+                # 2-D tensor parallel: EP over 'model' + TP over 'data' on
+                # the non-reduction dim — no FSDP weight gathers; activation
+                # partial-sums all-reduce instead (§Perf hillclimb variant)
+                if "/wo" in path:
+                    return wrap("model", "data" if _div(core[1], axes, "data") else None, None)
+                return wrap("model", None, "data" if _div(core[2], axes, "data") else None)
+            return wrap(
+                "model" if _div(core[0], axes, "model") else None,
+                "data" if _div(core[1], axes, "data") else None,
+                None,
+            )
+        if len(core) == 2:
+            if "router" in path:
+                return wrap(None, None)
+            return wrap(*_kernel_spec(core, axes))
+    return wrap(*([None] * len(core)))
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, f"{prefix}/{k}")
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def param_pspecs(shape_tree, axes: dict) -> Any:
+    """PartitionSpec tree matching a params shape tree."""
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            t = type(tree)
+            return t(walk(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return _spec_for(prefix, tree.shape, axes)
+
+    return walk(shape_tree)
+
+
+def _batch_dim_spec(n, axes):
+    """Shard a batch-like dim over ('pod','data') jointly when possible."""
+    if "pod" in axes and n % (axes["pod"] * axes["data"]) == 0:
+        return ("pod", "data")
+    if _div(n, axes, "data"):
+        return "data"
+    return None
+
+
+def _cache_leaf_spec(path: str, shape, axes, stacked_lead=True) -> P:
+    ndim = len(shape)
+    if ndim <= 1:
+        return P()
+    lead = (None,) if stacked_lead else ()
+    core = shape[1:] if stacked_lead else shape
+    dims = [None] * len(core)
+    # core: (B, S, H, D) / (B, S, H) / (B, S) / ssm (B, H, P, N) / (B, W)
+    if len(core) >= 1:
+        dims[0] = _batch_dim_spec(core[0], axes)
+    if len(core) >= 3 and ("idx" in path or "sel" in path or path.endswith("k") or path.endswith("v") or "scale" in path or "state" in path.lower()):
+        # prefer head/model sharding on dim 2 when divisible
+        if len(core) >= 3 and _div(core[2], axes, "model"):
+            dims[2] = "model"
+        elif _div(core[1], axes, "model"):
+            dims[1] = "model"  # fall back: shard sequence over 'model'
+    return P(*(lead + tuple(dims)))
+
+
+def cache_pspecs(cache_shape_tree, axes: dict) -> Any:
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            t = type(tree)
+            return t(walk(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return _cache_leaf_spec(prefix, tree.shape, axes)
+
+    return walk(cache_shape_tree)
+
+
+def batch_pspecs(specs: dict, axes: dict) -> dict:
+    out = {}
+    for k, v in specs.items():
+        dims = [None] * len(v.shape)
+        if len(v.shape) >= 1:
+            dims[0] = _batch_dim_spec(v.shape[0], axes)
+        out[k] = P(*dims)
+    return out

@@ -1,0 +1,183 @@
+"""Deep numerical correctness of the model-math substrates:
+SSD chunked scan == sequential recurrence; MoE dispatch invariants;
+RG-LRU associative scan == sequential loop; window attention == full
+attention with a window mask."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke
+from repro.core.bcq import BCQConfig
+from repro.models import moe as moe_lib
+from repro.models.hybrid import _lru_scan
+from repro.models.layers import Runtime, _attend_chunked
+from repro.models.ssm import ssd_chunked
+
+RT = Runtime(quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32)
+
+
+# ------------------------------------------------------------------- SSD
+def _ssd_sequential(x, dt, a, b_in, c_in):
+    """Token-by-token reference: h_t = exp(dt·a)h + x_t ⊗ b_t; y = h·c."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    state = jnp.zeros((bsz, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t] * a[None, :])  # (B, H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x[:, t], b_in[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, c_in[:, t]))
+    return jnp.stack(ys, 1), state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_equals_sequential(chunk):
+    key = jax.random.PRNGKey(0)
+    bsz, s, h, p, n = 2, 32, 3, 4, 8
+    x = jax.random.normal(key, (bsz, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    b_in = jax.random.normal(jax.random.fold_in(key, 3), (bsz, s, n))
+    c_in = jax.random.normal(jax.random.fold_in(key, 4), (bsz, s, n))
+    xdt = x * dt[..., None]
+    y_ref, st_ref = _ssd_sequential(xdt, dt, a, b_in, c_in)
+    y, st = ssd_chunked(xdt, dt, a, b_in, c_in, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- RG-LRU
+def test_lru_scan_equals_loop():
+    key = jax.random.PRNGKey(1)
+    b, s, w = 2, 17, 8
+    a = jax.nn.sigmoid(jax.random.normal(key, (b, s, w)))
+    u = jax.random.normal(jax.random.fold_in(key, 1), (b, s, w))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (b, w))
+    got = _lru_scan(a, u, h0)
+    h = h0
+    ref = []
+    for t in range(s):
+        h = a[:, t] * h + u[:, t] + (a[:, t] * 0 if t else 0)
+    # recompute reference properly (initial state folded into u[0])
+    h = h0
+    ref = []
+    for t in range(s):
+        h = a[:, t] * h + u[:, t]
+        ref.append(h)
+    ref = jnp.stack(ref, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- window attention
+def test_window_attention_equals_masked_full():
+    key = jax.random.PRNGKey(2)
+    b, s, h, d, w = 1, 64, 2, 16, 16
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    got = _attend_chunked(q, k, v, pos, s, True, w, chunk=16)
+    # reference: full attention with explicit causal+window mask
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) * d**-0.5
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = (j <= i) & (i - j < w)
+    sc = jnp.where(m[None, None], sc, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- MoE
+def _moe_setup(t=64, d=16, e=8, k=2, cf=4.0):
+    from repro.configs.base import MoESpec
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke("qwen3_moe_235b"),
+        d_model=d,
+        moe=MoESpec(n_experts=e, top_k=k, d_ff_expert=32, capacity_factor=cf),
+    )
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, RT)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, t, d)) * 0.5
+    return cfg, p, x
+
+
+def test_moe_matches_dense_reference():
+    """Capacity ≫ tokens → sort-based dispatch == dense 'all tokens through
+    top-k experts' reference."""
+    cfg, p, x = _moe_setup(cf=16.0)
+    out, aux = moe_lib.moe_ffn(x, p, cfg, RT, None)
+    # dense reference
+    t = x.shape[1]
+    xt = x.reshape(t, -1)
+    logits = xt @ p["router"]["kernel"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, ids = jax.lax.top_k(probs, cfg.moe.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    wi, wg, wo = p["wi"]["kernel"], p["wg"]["kernel"], p["wo"]["kernel"]
+    ref = jnp.zeros_like(xt)
+    for kk in range(cfg.moe.top_k):
+        for ei in range(cfg.moe.n_experts):
+            sel = ids[:, kk] == ei
+            h = xt @ wi[ei]
+            g = xt @ wg[ei]
+            y = (jax.nn.silu(g) * h) @ wo[ei]
+            ref += jnp.where(sel[:, None], y * gate[:, kk : kk + 1], 0.0)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(t, -1)), np.asarray(ref), rtol=2e-3, atol=2e-3
+    )
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity 1 token/expert, total routed mass shrinks but output
+    stays finite and bounded."""
+    cfg, p, x = _moe_setup(t=128, cf=0.02)
+    out, _ = moe_lib.moe_ffn(x, p, cfg, RT, None)
+    assert np.isfinite(np.asarray(out)).all()
+    full_cfg, _, _ = _moe_setup(t=128, cf=16.0)
+    out_full, _ = moe_lib.moe_ffn(x, p, full_cfg, RT, None)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(out_full)) + 1e-3
+
+
+def test_moe_permutation_equivariance():
+    """Permuting tokens permutes outputs (dispatch has no positional leak)."""
+    cfg, p, x = _moe_setup(t=32, cf=16.0)
+    perm = jax.random.permutation(jax.random.PRNGKey(7), 32)
+    out1, _ = moe_lib.moe_ffn(x, p, cfg, RT, None)
+    out2, _ = moe_lib.moe_ffn(x[:, perm], p, cfg, RT, None)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, perm]), np.asarray(out2), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_hybrid_ring_buffer_wraparound():
+    """RecurrentGemma decode past the window boundary: the ring-buffer
+    cache must equal teacher-forced parallel logits even after slots wrap
+    (window=32 in the smoke config; decode to position 40)."""
+    from repro.models import hybrid, transformer, zoo
+
+    cfg = get_smoke("recurrentgemma_9b")  # window 32
+    api = zoo.build(cfg, RT)
+    params = api.init(jax.random.PRNGKey(0))
+    s_total = 40
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, s_total), 0, cfg.vocab)
+
+    # parallel teacher-forced logits
+    x = transformer.embed_tokens(params, tokens, RT)
+    pos = jnp.broadcast_to(jnp.arange(s_total)[None], (1, s_total))
+    h, _ = hybrid.hybrid_backbone(params, x, cfg, RT, pos)
+    full = transformer.lm_logits(params, h, RT)
+
+    # prefill 8, then decode one token at a time through the ring
+    lg, caches = api.prefill_fn(params, {"tokens": tokens[:, :8]}, s_total)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, 7]), rtol=5e-3, atol=5e-3)
+    for t in range(8, s_total):
+        lg, caches = api.decode_fn(params, caches, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, t]), rtol=5e-3, atol=5e-3,
+            err_msg=f"divergence at position {t} (window={cfg.hybrid.window})",
+        )

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on the system's core invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import bcq, formats
+from repro.core.bcq import BCQConfig, fit_lobcq
+from repro.core.lloyd_max import lloyd_max_1d, quantile_init, quantize_to_levels
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=20)
+hypothesis.settings.load_profile("ci")
+
+CFG = BCQConfig()
+_DATA = jax.random.laplace(jax.random.PRNGKey(0), (60000,))
+_CB = fit_lobcq(_DATA, CFG, iters=5, max_blocks=4096).as_jnp()
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["normal", "laplace", "outlier", "tiny", "huge"]))
+def test_fake_quant_quasi_idempotent(seed, kind):
+    """Q(Q(x)) ≈ Q(x).  Exact idempotency is impossible with *dynamic*
+    scales (amax(Q(x)) ≠ amax(x) re-derives a different grid); the sound
+    invariant is that re-quantization moves each scalar by a few
+    quantization steps at most (s_X shift + per-array E4M3 re-snap each
+    perturb the grid; empirically ≤ ~3.2 steps, we bound at 5)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (8, 128))
+    if kind == "laplace":
+        x = jax.random.laplace(key, (8, 128))
+    elif kind == "outlier":
+        x = jnp.where(jax.random.bernoulli(key, 0.01, x.shape), x * 50, x)
+    elif kind == "tiny":
+        x = x * 1e-6
+    elif kind == "huge":
+        x = x * 1e6
+    q1 = bcq.fake_quant(x, _CB, CFG)
+    q2 = bcq.fake_quant(q1, _CB, CFG)
+    arrays = np.asarray(q1).reshape(8, -1, CFG.array_len)
+    amax = np.abs(arrays).max(-1, keepdims=True)
+    step = amax / CFG.codeword_max + 1e-30
+    diff = np.abs(np.asarray(q2) - np.asarray(q1)).reshape(arrays.shape)
+    assert (diff <= 5.0 * step + 1e-6 * amax).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_quant_error_bounded_by_array_range(seed):
+    """|x - Q(x)| ≤ amax(array): coarse sanity bound on every scalar."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 256)) * 3
+    q = bcq.fake_quant(x, _CB, CFG)
+    arrays = x.reshape(4, -1, CFG.array_len)
+    amax = jnp.max(jnp.abs(arrays), -1, keepdims=True)
+    err = jnp.abs((x - q).reshape(arrays.shape))
+    assert bool(jnp.all(err <= amax + 1e-5))
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_encode_decode_equals_fake_quant(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 192))
+    enc = bcq.encode(x, _CB, CFG)
+    dec = bcq.decode(enc, _CB, CFG, x.shape[-1])
+    fq = bcq.fake_quant(x, _CB, CFG)
+    np.testing.assert_array_equal(np.asarray(dec, np.float32), np.asarray(fq, np.float32))
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_scale_invariance(seed):
+    """BCQ with dynamic per-tensor scale is (nearly) scale-equivariant:
+    Q(c·x) ≈ c·Q(x) up to E4M3 snap of the ratio (exact for powers of 2)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 128))
+    c = 8.0  # power of two → s_X scales exactly, ratios unchanged
+    q1 = bcq.fake_quant(x * c, _CB, CFG)
+    q2 = bcq.fake_quant(x, _CB, CFG) * c
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4))
+def test_lobcq_mse_monotone(seed, nc):
+    """Paper §A.2: LO-BCQ MSE is non-increasing across iterations."""
+    data = jax.random.laplace(jax.random.PRNGKey(seed), (20000,))
+    cfg = BCQConfig(n_codebooks=2**nc // 2)
+    cbs = fit_lobcq(data, cfg, key=jax.random.PRNGKey(seed), iters=6, max_blocks=2048)
+    h = cbs.history
+    assert all(b <= a + 1e-7 for a, b in zip(h, h[1:])), h
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_lloyd_max_beats_uniform_grid(seed):
+    """Lloyd-Max levels achieve ≤ MSE of a uniform grid with equal levels."""
+    x = jax.random.laplace(jax.random.PRNGKey(seed), (20000,))
+    lm = lloyd_max_1d(x, quantile_init(x, 16), iters=40)
+    xq_lm = quantize_to_levels(x, lm)
+    grid = jnp.linspace(jnp.min(x), jnp.max(x), 16)
+    xq_g = quantize_to_levels(x, grid)
+    mse_lm = float(jnp.mean((x - xq_lm) ** 2))
+    mse_g = float(jnp.mean((x - xq_g) ** 2))
+    assert mse_lm <= mse_g * 1.01
+
+
+@given(st.floats(-440, 440, allow_nan=False))
+def test_e4m3_roundtrip_bits(v):
+    """e4m3 bit encode/decode is the identity on the E4M3 grid (positives)."""
+    g = float(formats.E4M3.quantize(jnp.float32(abs(v))))
+    if g == 0.0:
+        return
+    code = formats.e4m3_to_bits(jnp.float32(g))
+    back = float(formats.bits_to_e4m3(code))
+    assert back == g, (v, g, back)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(seed):
+    x = jax.random.randint(jax.random.PRNGKey(seed), (6, 64), 0, 16).astype(jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(bcq.unpack_nibbles(bcq.pack_nibbles(x))), np.asarray(x)
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_adamw_state_tree_structure_preserved(seed):
+    from repro.optim import adamw
+
+    key = jax.random.PRNGKey(seed)
+    p = {"a": jax.random.normal(key, (4, 4)), "b": {"c": jnp.zeros((3,))}}
+    st_ = adamw.init_state(p)
+    g = jax.tree.map(jnp.ones_like, p)
+    p2, st2, _ = adamw.apply_updates(p, g, st_, adamw.AdamWConfig())
+    assert jax.tree.structure(p2) == jax.tree.structure(p)
+    assert jax.tree.structure(st2["m"]) == jax.tree.structure(p)

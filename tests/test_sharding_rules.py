@@ -1,0 +1,101 @@
+"""Unit tests for the zoo sharding rules (no devices needed — pure specs)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeConfig, get_arch, get_smoke
+from repro.models import zoo
+from repro.models.layers import Runtime
+
+AXES = {"data": 16, "model": 16}
+RT = Runtime(quant_mode="none")
+
+
+def _specs(arch_id):
+    cfg = get_arch(arch_id)
+    api = zoo.build(cfg, RT)
+    shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    return cfg, shapes, zoo.param_pspecs(shapes, AXES)
+
+
+def _leaves_with_specs(shapes, specs):
+    flat_s = jax.tree.leaves(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    return list(zip(flat_s, flat_p))
+
+
+@pytest.mark.parametrize("arch_id", ["qwen1_5_32b", "qwen3_moe_235b", "mamba2_130m", "recurrentgemma_9b"])
+def test_specs_divisible(arch_id):
+    """Every sharded dim divides its axis size — the compile-time contract."""
+    _, shapes, specs = _specs(arch_id)
+    for shp, spec in _leaves_with_specs(shapes, specs):
+        for dim, names in zip(shp.shape, tuple(spec) + (None,) * 8):
+            if names is None:
+                continue
+            ns = names if isinstance(names, tuple) else (names,)
+            prod = 1
+            for n in ns:
+                prod *= AXES[n]
+            assert dim % prod == 0, (arch_id, shp.shape, spec)
+
+
+def test_fsdp_vs_tp_layout():
+    """TP layout never shards over 'data' (no FSDP weight gathers)."""
+    old = zoo.PARAM_LAYOUT
+    try:
+        zoo.PARAM_LAYOUT = "tp"
+        _, shapes, specs = _specs("qwen1_5_32b")
+        for shp, spec in _leaves_with_specs(shapes, specs):
+            for names in tuple(spec):
+                ns = names if isinstance(names, tuple) else (names,)
+                assert "data" not in ns, (shp.shape, spec)
+    finally:
+        zoo.PARAM_LAYOUT = old
+
+
+def test_large_params_are_sharded():
+    """No ≥64 MiB leaf is left fully replicated under the training layout."""
+    _, shapes, specs = _specs("qwen1_5_32b")
+    for shp, spec in _leaves_with_specs(shapes, specs):
+        n_bytes = shp.size * shp.dtype.itemsize
+        if n_bytes >= 64 * 2**20:
+            assert any(d is not None for d in tuple(spec)), (shp.shape, spec)
+
+
+def test_cache_specs_shard_big_dims():
+    cfg = get_arch("qwen1_5_32b")
+    rt = Runtime(quant_mode="fake", compute_dtype=jnp.bfloat16)
+    shape = ShapeConfig("d", "decode", 32768, 128)
+    cs = zoo.cache_specs(cfg, rt, shape)
+    specs = zoo.cache_pspecs(cs, AXES)
+    k_spec = specs["k"]
+    # (L, B, S, H=40, D): batch over data; 40 heads don't divide 16 → the
+    # sequence dim takes 'model'
+    assert tuple(k_spec) == (None, "data", "model", None, None), k_spec
+
+
+def test_moe_expert_spec_variants():
+    old = zoo.MOE_EXPERT_SPEC
+    try:
+        _, shapes, specs = _specs("qwen3_moe_235b")
+        wi = specs["layers"]["moe"]["wi"]["kernel"]
+        assert tuple(wi) == (None, "model", "data", None)
+        zoo.MOE_EXPERT_SPEC = "tp2d"
+        _, _, specs2 = _specs("qwen3_moe_235b")
+        wi2 = specs2["layers"]["moe"]["wi"]["kernel"]
+        wo2 = specs2["layers"]["moe"]["wo"]["kernel"]
+        assert tuple(wi2) == (None, "model", None, "data")
+        assert tuple(wo2) == (None, "model", "data", None)
+    finally:
+        zoo.MOE_EXPERT_SPEC = old
+
+
+def test_batch_specs_multipod():
+    axes = {"pod": 2, "data": 16, "model": 16}
+    cfg = get_arch("qwen1_5_32b")
+    rt = Runtime()
+    specs = zoo.input_specs(cfg, rt, ShapeConfig("t", "train", 4096, 256))
+    bs = zoo.batch_pspecs(specs, axes)
+    assert bs["tokens"] == P(("pod", "data"), None)
