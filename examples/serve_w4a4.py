@@ -17,7 +17,7 @@ from repro.core import ptq
 from repro.core.bcq import BCQConfig
 from repro.core.calibrate import calibrate_from_model
 from repro.data.pipeline import DataConfig, batch_at
-from repro.launch.serve import greedy_generate
+from repro.serving.generate import greedy_generate
 from repro.launch.train import make_train_step
 from repro.models import zoo
 from repro.models.layers import Runtime

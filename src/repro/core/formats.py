@@ -183,12 +183,15 @@ def e4m3_to_bits(x: jax.Array, bits: int = 8) -> jax.Array:
     return (code_e * 8 + man).astype(jnp.uint8)
 
 
-@jax.jit
-def bits_to_e4m3(code: jax.Array) -> jax.Array:
-    """Inverse of :func:`e4m3_to_bits` (positive scales only)."""
+def bits_to_e4m3_impl(code: jax.Array) -> jax.Array:
+    """Inverse of :func:`e4m3_to_bits` (positive scales only).  Un-jitted so
+    it can be inlined inside Pallas kernel bodies."""
     code = code.astype(jnp.int32)
     code_e = code // 8
     man = (code % 8).astype(jnp.float32)
     sub = 2.0**-6 * (man * 0.125)
     nrm = 2.0 ** (code_e.astype(jnp.float32) - 7) * (1.0 + man * 0.125)
     return jnp.where(code_e == 0, sub, nrm)
+
+
+bits_to_e4m3 = jax.jit(bits_to_e4m3_impl)

@@ -75,3 +75,67 @@ def matmul_ref(
 
 def inv_scale(ratio: jax.Array, s_x: jax.Array) -> jax.Array:
     return 1.0 / (ratio * s_x)
+
+
+# ---------------------------------------------------- paged attention oracle
+def _dequant_pool_ref(pool: dict, nm: str, kind: str, cfg: BCQConfig) -> jax.Array:
+    """Dequantize the whole page pool's K or V side to f32 (P, ps, H, D)."""
+    if kind == "bf16":
+        return pool[nm].astype(jnp.float32)
+    if kind == "int8":
+        return pool[nm].astype(jnp.float32) * pool[f"{nm}_scale"][..., None]
+    if kind == "bcq4":
+        idx = unpack_nibbles(pool[f"{nm}_idx"]).astype(jnp.int32)
+        d = idx.shape[-1]
+        if d % cfg.array_len:
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, array_len=min(cfg.array_len, d))
+        nb = d // cfg.block_len
+        sel = unpack_nibbles(pool[f"{nm}_sel"]).astype(jnp.int32)[..., :nb]
+        ratio = formats.bits_to_e4m3(pool[f"{nm}_scale"])
+        inv = jnp.where(ratio > 0, 1.0 / (ratio * pool[f"{nm}_sx"]), 0.0)
+        flat = pool["_cb"].reshape(-1)
+        vals = flat[jnp.repeat(sel, cfg.block_len, -1) * cfg.n_entries + idx]
+        return vals * jnp.repeat(inv, cfg.array_len, -1)
+    raise ValueError(kind)
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    pool: dict,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    kind: str,
+    cfg: BCQConfig,
+    cb: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for the Pallas paged decode kernel: exact masked softmax over
+    the block-table-gathered, dequantized pages.
+
+    q (B, H, D); pool leaves (P, ps, Hkv, ...); block_tables (B, MAXP);
+    lengths (B,) live tokens.  Returns (B, H, D) f32."""
+    pool = dict(pool)
+    if cb is not None:
+        pool["_cb"] = cb
+    b, h, d = q.shape
+    kf = _dequant_pool_ref(pool, "k", kind, cfg)  # (P, ps, Hkv, D)
+    vf = _dequant_pool_ref(pool, "v", kind, cfg)
+    ps = kf.shape[1]
+    hkv = kf.shape[2]
+
+    def gather(x):
+        g = x[block_tables]  # (B, MAXP, ps, Hkv, D)
+        return g.reshape(b, -1, hkv, d)
+
+    kg, vg = gather(kf), gather(vf)
+    rep = h // hkv
+    if rep > 1:
+        kg = jnp.repeat(kg, rep, axis=2)
+        vg = jnp.repeat(vg, rep, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kg) * (d**-0.5)
+    tpos = jnp.arange(kg.shape[1])
+    mask = tpos[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p, vg)

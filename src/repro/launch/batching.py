@@ -25,14 +25,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+from repro.serving.generate import (  # noqa: F401  (Request re-exported)
+    Request,
+    next_greedy_tokens,
+    sequence_finished,
+)
 
 
 @dataclasses.dataclass
@@ -76,7 +73,7 @@ class ContinuousBatcher:
                 else big,
                 self.caches, c1,
             )
-            first = int(jnp.argmax(logits[0, -1]))
+            first = int(next_greedy_tokens(logits)[0])
             req.out.append(first)
             slot.req = req
             slot.pos = len(req.prompt)
@@ -115,16 +112,14 @@ class ContinuousBatcher:
                 return new
 
             self.caches = jax.tree.map(merge, new_caches, self.caches)
-            nxt = jnp.argmax(logits[:, -1, :], -1)
+            nxt = next_greedy_tokens(logits)
             for i in idxs:
                 slot = self.slots[i]
                 tok = int(nxt[i])
                 slot.req.out.append(tok)
                 slot.pos += 1
-                if (
-                    tok == self.eos
-                    or len(slot.req.out) >= slot.req.max_new + 1
-                    or slot.pos >= self.max_len - 1
+                if sequence_finished(
+                    tok, len(slot.req.out), slot.req.max_new, slot.pos, self.max_len, self.eos
                 ):
                     slot.req.done = True
                     self.finished.append(slot.req)

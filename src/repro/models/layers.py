@@ -65,6 +65,10 @@ class Runtime:
     # (kernels/flash_attention.py): O(S·d) HBM instead of O(S²) scores.
     # interpret-mode on CPU (tests); native on TPU.  Causal, no window.
     flash_kernel: bool = False
+    # route paged decode attention through the Pallas paged kernel
+    # (kernels/paged_attention.py) instead of the gather+dequant jnp path.
+    # interpret-mode on CPU (tests); native on TPU.
+    paged_kernel: bool = False
     mesh: Any = None  # required (hashable) when flash_decode is set
 
 
@@ -316,8 +320,20 @@ def cache_write(cache, k_new, v_new, pos, kind, cfg: BCQConfig, cb):
     raise ValueError(kind)
 
 
-def cache_read(cache, kind, cfg: BCQConfig, cb, dtype):
-    """Dequantize full cache → (k, v) in compute dtype."""
+def cache_read(cache, kind, cfg: BCQConfig, cb, dtype, valid_len: Optional[int] = None):
+    """Dequantize cache → (k, v) in compute dtype.
+
+    ``valid_len`` (STATIC) bounds the read to the first ``valid_len``
+    sequence positions: the int8/bcq4 dequant (gathers + multiplies) then
+    runs over only the written prefix instead of the whole max-length
+    buffer.  Callers that know a static upper bound on the number of live
+    tokens (e.g. bucketed decode, paged gathers) pass it; ``None`` keeps
+    the full-cache behaviour."""
+    if valid_len is not None:
+        cache = {
+            n: (leaf[:, :valid_len] if getattr(leaf, "ndim", 0) >= 2 else leaf)
+            for n, leaf in cache.items()
+        }
     if kind == "bf16":
         return cache["k"].astype(dtype), cache["v"].astype(dtype)
     if kind == "int8":
@@ -351,6 +367,63 @@ def cache_sx_calibrate(cache, k_sample, v_sample, kind, cfg: BCQConfig):
     out["k_sx"] = bcq.tensor_scale(k_sample.astype(jnp.float32), cfg)
     out["v_sx"] = bcq.tensor_scale(v_sample.astype(jnp.float32), cfg)
     return out
+
+
+# ------------------------------------------------------- paged KV pages
+# A page pool is structurally a KV cache whose batch axis is the global
+# page pool and whose sequence axis is the page slot: leaves are
+# (n_pages, page_size, H, ...) built by cache_init(n_pages, page_size, ...).
+# Because cache quantization is per (token, head) vector along d_head —
+# an integer number of L_A block arrays — a page boundary never splits a
+# BCQ block array, so pages carry their own scale/selector metadata and
+# dequantize independently.
+
+
+def pool_page_size(pool: dict) -> int:
+    """Page size (tokens) of a single-layer page-pool tree."""
+    for leaf in pool.values():
+        if getattr(leaf, "ndim", 0) >= 2:
+            return leaf.shape[1]
+    raise ValueError("pool has no paged leaves")
+
+
+def paged_token_write(pool, k_new, v_new, page_ids, offsets, kind, cfg: BCQConfig, cb):
+    """Quantize one new token per sequence and scatter it into its page.
+
+    pool: single-layer page-pool tree, leaves (P, ps, H, ...);
+    k_new/v_new: (B, 1, H, D); page_ids/offsets: (B,) int32 page slot of
+    each sequence's tail.  Sequences never share a mutable page (the
+    engine's copy-on-write guarantees the tail page is private), so the
+    per-batch scatters are disjoint."""
+    b = k_new.shape[0]
+    stage = cache_init(b, 1, k_new.shape[2], k_new.shape[3], kind, cfg)
+    for n in ("k_sx", "v_sx"):
+        if n in pool:
+            stage[n] = pool[n]
+    enc = cache_write(stage, k_new, v_new, 0, kind, cfg, cb)
+    out = dict(pool)
+    for n, leaf in pool.items():
+        if getattr(leaf, "ndim", 0) < 2:
+            continue  # per-tensor scales are pool-global
+        out[n] = leaf.at[page_ids, offsets].set(enc[n][:, 0].astype(leaf.dtype))
+    return out
+
+
+def paged_gather_kv(pool, block_tables, kind, cfg: BCQConfig, cb, dtype):
+    """Gather each sequence's pages via its block table and dequantize.
+
+    block_tables: (B, MAXP) int32 page ids (0 = reserved null page).
+    Returns (k, v) of shape (B, MAXP·ps, H, D) — only referenced pages are
+    read from the pool; dead/beyond-length positions hold garbage and must
+    be masked by the caller's validity mask."""
+    gathered = {}
+    for n, leaf in pool.items():
+        if getattr(leaf, "ndim", 0) < 2:
+            gathered[n] = leaf
+            continue
+        g = leaf[block_tables]  # (B, MAXP, ps, ...)
+        gathered[n] = g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+    return cache_read(gathered, kind, cfg, cb, dtype)
 
 
 def maybe_remat(fn, rt: Runtime):
@@ -541,10 +614,17 @@ def attention(
     window=None,
     kv_override=None,
     use_rope=True,
+    kv_bound=None,
+    paged=None,
 ):
     """GQA attention.  With ``cache``: read-modify-write decode/prefill path
     (returns (out, new_cache)); without: self-attention over x itself.
-    ``kv_override``: (k, v) for cross-attention (enc-dec)."""
+    ``kv_override``: (k, v) for cross-attention (enc-dec).
+    ``kv_bound``: STATIC upper bound on live cache positions — the decode
+    read dequantizes/attends over only that prefix (bucketed decode).
+    ``paged``: (pool, block_tables, lengths) page-pool state; the new token
+    is scattered into its page and attention gathers live pages only.
+    Returns (out, new_pool)."""
     b, s, _ = x.shape
     hd = cfg.head_dim
     if kv_override is None:
@@ -559,6 +639,31 @@ def attention(
         q = qdense(x, p["wq"], rt, cb).reshape(b, s, cfg.n_heads, hd)
         k, v = kv_override
 
+    if paged is not None:
+        pool, block_tables, lengths = paged
+        ps = pool_page_size(pool)
+        page_ids = block_tables[jnp.arange(b), lengths // ps]
+        new_pool = paged_token_write(
+            pool, k, v, page_ids, lengths % ps, rt.cache_kind, rt.bcq_cfg, cb
+        )
+        valid = lengths + s  # (B,) per-sequence live tokens incl. the new one
+        if rt.paged_kernel and s == 1 and window is None:
+            from repro.kernels.paged_attention import paged_attention
+
+            out = paged_attention(
+                q[:, 0], new_pool, block_tables, valid, rt.cache_kind, rt.bcq_cfg, cb
+            ).astype(q.dtype)[:, None]
+        else:
+            kf, vf = paged_gather_kv(
+                new_pool, block_tables, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype
+            )
+            out = _attend_chunked(
+                q, kf, vf, positions, valid.reshape(b, 1, 1, 1), causal, window,
+                rt.attn_chunk, rt.unroll, rt.attn_f32,
+            )
+        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+        return out, new_pool
+
     new_cache = None
     if cache is not None:
         use_flash = rt.flash_decode and rt.mesh is not None and s == 1 and window is None
@@ -566,7 +671,10 @@ def attention(
             new_cache = cache_write_sharded(cache, k, v, cache_pos, rt, cb)
         else:
             new_cache = cache_write(cache, k, v, cache_pos, rt.cache_kind, rt.bcq_cfg, cb)
-        kf, vf = cache_read(new_cache, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype)
+        kf, vf = cache_read(
+            new_cache, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype,
+            valid_len=None if use_flash else kv_bound,
+        )
         valid = cache_pos + s
         out = None
         if use_flash:

@@ -81,10 +81,12 @@ def init_block(key, cfg: ArchConfig, rt: Runtime):
     return p
 
 
-def block_apply(x, p, cfg, rt: Runtime, cb, positions, cache=None, cache_pos=None):
+def block_apply(x, p, cfg, rt: Runtime, cb, positions, cache=None, cache_pos=None,
+                kv_bound=None, paged=None):
     h = layers.norm_apply(x, p["ln1"], cfg.norm)
     attn_out, new_cache = layers.attention(
-        h, p["attn"], cfg, rt, cb, positions, cache=cache, cache_pos=cache_pos
+        h, p["attn"], cfg, rt, cb, positions, cache=cache, cache_pos=cache_pos,
+        kv_bound=kv_bound, paged=paged,
     )
     x = x + attn_out
     h = layers.norm_apply(x, p["ln2"], cfg.norm)
@@ -114,16 +116,26 @@ def _codebooks(params):
     return params.get("codebooks")
 
 
-def backbone(params, x, cfg, rt: Runtime, positions, caches=None, cache_pos=None):
-    """Scan the layer stack.  caches: stacked (L, ...) pytree or None."""
+def backbone(params, x, cfg, rt: Runtime, positions, caches=None, cache_pos=None,
+             kv_bound=None, paged_tables=None):
+    """Scan the layer stack.  caches: stacked (L, ...) pytree or None.
+    ``paged_tables``: (block_tables, lengths) — treat ``caches`` as a page
+    pool (leaves (L, n_pages, page_size, ...)) instead of slot caches."""
     cb = _codebooks(params)
 
     def body(carry, xs):
         h, aux = carry
         p_layer, cache_layer = xs
-        out, new_cache, a = block_apply(
-            h, p_layer, cfg, rt, cb, positions, cache_layer, cache_pos
-        )
+        if paged_tables is not None:
+            out, new_cache, a = block_apply(
+                h, p_layer, cfg, rt, cb, positions,
+                paged=(cache_layer,) + tuple(paged_tables),
+            )
+        else:
+            out, new_cache, a = block_apply(
+                h, p_layer, cfg, rt, cb, positions, cache_layer, cache_pos,
+                kv_bound=kv_bound,
+            )
         return (out, aux + a), new_cache
 
     body_fn = layers.maybe_remat(body, rt)
@@ -177,12 +189,33 @@ def prefill(params, batch, cfg: ArchConfig, rt: Runtime, max_len):
     return logits, caches
 
 
-def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime):
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime, kv_bound=None):
     """One serving step: tokens (B, 1) at absolute position ``pos`` (traced
-    scalar); caches hold ``pos`` valid entries.  Returns (logits, caches)."""
+    scalar); caches hold ``pos`` valid entries.  Returns (logits, caches).
+    ``kv_bound`` (STATIC, optional): upper bound on live positions — the
+    cache read dequantizes only that prefix instead of the full buffer."""
     b, s = tokens.shape
     x = embed_tokens(params, tokens, rt)
     positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-    x, caches, _ = backbone(params, x, cfg, rt, positions, caches, cache_pos=pos)
+    x, caches, _ = backbone(
+        params, x, cfg, rt, positions, caches, cache_pos=pos, kv_bound=kv_bound
+    )
     logits = lm_logits(params, x, rt)
     return logits, caches
+
+
+def paged_decode_step(params, pool, tokens, block_tables, lengths, cfg: ArchConfig, rt: Runtime):
+    """One paged serving step over a shared page pool.
+
+    tokens: (B, 1) next token per sequence; block_tables: (B, MAXP) int32
+    page ids; lengths: (B,) tokens already in cache per sequence (the new
+    token is written at that position).  Positions are per-sequence, so one
+    fused step serves slots at different depths.  Returns (logits, pool)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, rt)
+    positions = lengths[:, None] + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, pool, _ = backbone(
+        params, x, cfg, rt, positions, pool, paged_tables=(block_tables, lengths)
+    )
+    logits = lm_logits(params, x, rt)
+    return logits, pool

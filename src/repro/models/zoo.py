@@ -48,6 +48,9 @@ class ModelAPI:
     prefill_fn: Callable[..., Any]
     decode_fn: Callable[..., Any]
     cache_init: Callable[..., Any]
+    # paged-serving entry points (attention-cache families only)
+    paged_decode_fn: Callable[..., Any] = None
+    pool_init: Callable[..., Any] = None
 
 
 def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
@@ -58,8 +61,14 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
             init=lambda k: transformer.init_lm(k, cfg, rt),
             loss_fn=lambda p, b: transformer.forward_train(p, b, cfg, rt),
             prefill_fn=lambda p, b, ml: transformer.prefill(p, b, cfg, rt, ml),
-            decode_fn=lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg, rt),
+            decode_fn=lambda p, c, t, pos, kv_bound=None: transformer.decode_step(
+                p, c, t, pos, cfg, rt, kv_bound=kv_bound
+            ),
             cache_init=lambda bsz, ml: transformer.cache_init_stacked(cfg, rt, bsz, ml),
+            paged_decode_fn=lambda p, pool, t, bt, ln: transformer.paged_decode_step(
+                p, pool, t, bt, ln, cfg, rt
+            ),
+            pool_init=lambda n_pages, ps: transformer.cache_init_stacked(cfg, rt, n_pages, ps),
         )
     if fam == "ssm":
         return ModelAPI(

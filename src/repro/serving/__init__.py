@@ -1,0 +1,16 @@
+"""Paged BCQ KV-cache serving subsystem.
+
+- pages.py   — page allocator + block-table page ops (page = N tokens of
+               bf16 / int8 / packed-BCQ4 KV with per-page metadata)
+- prefix.py  — prefix caching: refcounted, copy-on-write sharing of
+               immutable full pages across requests
+- engine.py  — PagedEngine: continuous batching over the page pool with
+               admission control and preemption-by-eviction
+- generate.py — shared greedy-decode helpers (all serving paths)
+"""
+from repro.serving.engine import PagedEngine
+from repro.serving.generate import greedy_generate
+from repro.serving.pages import NULL_PAGE, PagePool
+from repro.serving.prefix import PrefixCache
+
+__all__ = ["PagedEngine", "greedy_generate", "PagePool", "PrefixCache", "NULL_PAGE"]

@@ -1,0 +1,315 @@
+"""PagedEngine: continuous batching over a paged, quantized KV-cache.
+
+Replaces the slot-contiguous cache of ``launch.batching.ContinuousBatcher``
+with a global page pool + per-sequence block tables:
+
+* **memory**: a sequence holds ceil(len/page_size) pages instead of a
+  max-length slot; identical prompt prefixes share full pages through the
+  prefix cache (refcounted, copy-on-write);
+* **bandwidth**: decode attention gathers only the referenced pages
+  (dequantizing int8/bcq4 pages on the fly — in-kernel with
+  Runtime.paged_kernel), never the max-length buffer;
+* **scheduling**: positions are per-sequence, so ONE fused decode step
+  serves all active slots regardless of depth (the contiguous engine had
+  to tick per unique position);
+* **admission control** by free-page watermark, and **preemption by
+  eviction** when the pool runs dry: the youngest sequence loses its pages
+  and is requeued in recompute mode (prompt := prompt + generated), which
+  is greedy-exact.
+
+Greedy outputs are token-for-token identical to the contiguous engine:
+the pool reuses cache_write's quantization layouts page by page, gathered
+decode attention sees the same dequantized values with the same shapes
+(max_len == MAXP·page_size), and masked tail positions contribute exact
+zeros either way.  Verified in tests/test_paged_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import pages as pages_lib
+from repro.serving.generate import Request, next_greedy_tokens, sequence_finished
+from repro.serving.pages import NULL_PAGE, PagePool, pages_needed
+from repro.serving.prefix import PrefixCache, chunk_hashes
+
+
+@dataclasses.dataclass
+class _PagedSlot:
+    req: Optional[Request] = None
+    pos: int = 0  # tokens currently in cache (next write position)
+    admit_seq: int = 0  # admission order — preemption victims are youngest-first
+
+
+class PagedEngine:
+    """Fixed-slot continuous batching over a shared paged KV pool."""
+
+    def __init__(
+        self,
+        api,
+        params,
+        n_slots: int,
+        max_len: int,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        eos_id: int = -1,
+        prefix_caching: bool = True,
+        watermark: Optional[int] = None,
+    ):
+        assert api.paged_decode_fn is not None, "family has no paged serving path"
+        assert max_len % page_size == 0, "page_size must divide max_len"
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ps = page_size
+        self.maxp = max_len // page_size
+        self.eos = eos_id
+        self.prefix_caching = prefix_caching
+        # watermark: decode headroom kept free at admission — every active
+        # slot may need one fresh page on any upcoming tick
+        self.watermark = n_slots if watermark is None else watermark
+        if n_pages is None:
+            n_pages = 1 + n_slots * self.maxp  # null page + worst case
+        self.pool_mgr = PagePool(n_pages)
+        self.prefix = PrefixCache()
+        self.pool = api.pool_init(n_pages, page_size)
+
+        self.slots = [_PagedSlot() for _ in range(n_slots)]
+        self.tables = np.zeros((n_slots, self.maxp), np.int32)  # NULL_PAGE padded
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._next_tok = np.zeros((n_slots,), np.int32)
+        self._admit_counter = 0
+        self._prefill = jax.jit(
+            lambda p, t: self.api.prefill_fn(p, {"tokens": t}, self.max_len)
+        )
+        self._scatter = jax.jit(pages_lib.scatter_prefill_pages)
+        self._decode = jax.jit(api.paged_decode_fn)
+        self._copy_page = jax.jit(pages_lib.copy_page)
+        self.stats = {
+            "prefix_hits": 0, "prefix_misses": 0, "preemptions": 0,
+            "prefix_evictions": 0, "peak_pages": 0, "decode_ticks": 0,
+        }
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------- page plumbing
+    def _alloc_page(self) -> Optional[int]:
+        """Allocate a page, evicting reclaimable prefix pages LRU-first."""
+        pid = self.pool_mgr.alloc()
+        while pid is None:
+            victim = self.prefix.evict_one()
+            if victim is None:
+                return None
+            self.stats["prefix_evictions"] += 1
+            self.pool_mgr.release(victim)
+            pid = self.pool_mgr.alloc()
+        self.stats["peak_pages"] = max(self.stats["peak_pages"], self.pool_mgr.used())
+        return pid
+
+    def _drop_page(self, pid: int):
+        if pid == NULL_PAGE:
+            return
+        if self.pool_mgr.deref(pid):
+            if self.prefix.knows(pid):
+                self.prefix.mark_reclaimable(pid)  # keep contents for reuse
+            else:
+                self.pool_mgr.release(pid)
+
+    def _free_slot(self, i: int):
+        for pid in self.tables[i]:
+            self._drop_page(int(pid))
+        self.tables[i] = NULL_PAGE
+        self.slots[i] = _PagedSlot()
+
+    def _available_pages(self) -> int:
+        return self.pool_mgr.available() + self.prefix.reclaimable_count()
+
+    # -------------------------------------------------------- admission
+    def _try_admit(self, req: Request, slot_idx: int) -> bool:
+        prompt = np.asarray(req.prompt, np.int64)
+        plen = len(prompt)
+        assert plen < self.max_len, "prompt does not fit the cache"
+        n_prompt_pages = pages_needed(plen, self.ps)
+        n_full = plen // self.ps
+
+        # plan: longest chain of full-page prefix hits (non-mutating peek —
+        # a refused admission must not unpark reclaimable pages or touch
+        # stats, since the head-of-line request is re-scanned every tick)
+        hashes = chunk_hashes(prompt, self.ps) if self.prefix_caching else []
+        hits: list[int] = []
+        for h in hashes:
+            pid = self.prefix.peek(h)
+            if pid is None:
+                break
+            hits.append(pid)
+
+        need = n_prompt_pages - len(hits)
+        if self._available_pages() < need + self.watermark:
+            return False  # admission control: keep decode headroom
+
+        # commit: claim the hit pages (revive reclaimable ones), count stats
+        self.stats["prefix_hits"] += len(hits)
+        self.stats["prefix_misses"] += n_prompt_pages - len(hits)
+        table = np.full((self.maxp,), NULL_PAGE, np.int32)
+        scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
+        for i, (h, pid) in enumerate(zip(hashes, hits)):
+            claimed = self.prefix.lookup(h)  # unparks the reclaimable page
+            assert claimed == pid
+            if self.pool_mgr.refcount[pid] == 0:
+                self.pool_mgr.revive(pid)
+            else:
+                self.pool_mgr.ref(pid)
+            table[i] = pid
+        for i in range(len(hits), n_prompt_pages):
+            pid = self._alloc_page()
+            assert pid is not None  # guaranteed by the admission check
+            table[i] = pid
+            scatter_ids[i] = pid
+
+        # prefill the prompt (full max_len cache so shapes — and hence
+        # reduction order and greedy tokens — match the contiguous engine),
+        # then scatter the missed pages; shared pages are never rewritten.
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill(self.params, tokens)
+        self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
+        if self.prefix_caching:
+            for i in range(len(hits), n_full):
+                self.prefix.register(hashes[i], int(table[i]))
+
+        first = int(next_greedy_tokens(logits)[0])
+        req.out.append(first)
+        self.tables[slot_idx] = table
+        self.slots[slot_idx] = _PagedSlot(req=req, pos=plen, admit_seq=self._admit_counter)
+        self._admit_counter += 1
+        self._next_tok[slot_idx] = first
+        return True
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None or not self.queue:
+                continue
+            if not self._try_admit(self.queue[0], i):
+                break  # admission control: head-of-line blocks until pages free
+            self.queue.popleft()
+
+    # ------------------------------------------------------- preemption
+    def _preempt_one(self, exclude: Optional[int]) -> Optional[int]:
+        """Evict the youngest active sequence (≠ exclude if possible) back
+        to the queue in recompute mode.  Returns the victim slot index."""
+        cands = [i for i, s in enumerate(self.slots) if s.req is not None and i != exclude]
+        if not cands:
+            cands = [exclude] if exclude is not None and self.slots[exclude].req else []
+        if not cands:
+            return None
+        victim = max(cands, key=lambda i: self.slots[i].admit_seq)
+        slot = self.slots[victim]
+        req = slot.req
+        # recompute mode: prompt grows by everything generated so far; the
+        # requeued prefill then reproduces the exact greedy continuation
+        # (req.out is shared, so tokens keep accumulating on the same list)
+        resumed = Request(
+            rid=req.rid,
+            prompt=np.concatenate([np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)]),
+            max_new=req.max_new,
+            out=req.out,
+        )
+        self._free_slot(victim)
+        self.queue.appendleft(resumed)
+        self.stats["preemptions"] += 1
+        return victim
+
+    def _ensure_tail_page(self, i: int) -> bool:
+        """Make sure slot i's next write position has a private page."""
+        slot = self.slots[i]
+        pi = slot.pos // self.ps
+        pid = int(self.tables[i][pi])
+        if slot.pos % self.ps == 0 and pid == NULL_PAGE:
+            pid = self._alloc_page()
+            while pid is None:
+                if self._preempt_one(exclude=i) is None:
+                    return False
+                if self.slots[i].req is None:
+                    return False  # we preempted ourselves
+                pid = self._alloc_page()
+            self.tables[i][pi] = pid
+            return True
+        if pid != NULL_PAGE and self.pool_mgr.refcount[pid] > 1:
+            # copy-on-write: tail page is shared (forked sequence) — give
+            # this sequence a private copy before the token write
+            new = self._alloc_page()
+            while new is None:
+                if self._preempt_one(exclude=i) is None:
+                    return False
+                if self.slots[i].req is None:
+                    return False
+                new = self._alloc_page()
+            self.pool = self._copy_page(self.pool, pid, new)
+            self._drop_page(pid)  # source may have hit refcount 0 meanwhile
+            self.tables[i][pi] = new
+        return True
+
+    # ------------------------------------------------------------- ticks
+    def _active(self):
+        return [i for i, s in enumerate(self.slots) if s.req is not None]
+
+    def step(self) -> int:
+        """Admit + ONE fused decode tick for all active slots (any mix of
+        positions).  Returns the number of active slots served."""
+        self._admit()
+        active = [i for i in self._active() if self._ensure_tail_page(i)]
+        active = [i for i in active if self.slots[i].req is not None]
+        if not active:
+            return 0
+
+        lengths = np.zeros((self.n_slots,), np.int32)
+        for i in active:
+            lengths[i] = self.slots[i].pos
+        logits, self.pool = self._decode(
+            self.params,
+            self.pool,
+            jnp.asarray(self._next_tok[:, None], jnp.int32),
+            pages_lib.as_block_table_array(self.tables),
+            jnp.asarray(lengths, jnp.int32),
+        )
+        self.stats["decode_ticks"] += 1
+        nxt = np.asarray(next_greedy_tokens(logits))
+        for i in active:
+            slot = self.slots[i]
+            tok = int(nxt[i])
+            slot.req.out.append(tok)
+            slot.pos += 1
+            if sequence_finished(
+                tok, len(slot.req.out), slot.req.max_new, slot.pos, self.max_len, self.eos
+            ):
+                slot.req.done = True
+                self.finished.append(slot.req)
+                self._free_slot(i)
+            else:
+                self._next_tok[i] = tok
+        return len(active)
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or self._active()) and ticks < max_ticks:
+            served = self.step()
+            ticks += 1
+            if served == 0 and self.queue and not self._active():
+                raise RuntimeError(
+                    "pool too small to admit the pending request "
+                    f"(need pages for {len(self.queue[0].prompt)} prompt tokens, "
+                    f"free={self._available_pages()}, watermark={self.watermark})"
+                )
+        return self.finished, ticks
+
+    # ------------------------------------------------------------ metrics
+    def cache_pages_in_use(self) -> int:
+        return self.pool_mgr.used()

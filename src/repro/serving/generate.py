@@ -1,0 +1,75 @@
+"""Shared greedy-decoding helpers.
+
+One implementation of the greedy loop / stop rule, used by the
+single-batch driver (launch/serve.py, examples), the contiguous
+continuous-batching engine (launch/batching.py) and the paged engine
+(serving/engine.py) — previously copy-pasted per call-site.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (shared by the contiguous and paged engines)."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def next_greedy_tokens(logits) -> jnp.ndarray:
+    """(B, S, V) logits → (B,) greedy next token at the last position."""
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+def sequence_finished(tok: int, n_out: int, max_new: int, pos: int, max_len: int,
+                      eos_id: int = -1) -> bool:
+    """Stop rule shared by every serving path: EOS, generation budget
+    (prefill token + max_new decode tokens), or cache exhaustion."""
+    return tok == eos_id or n_out >= max_new + 1 or pos >= max_len - 1
+
+
+def kv_bucket_bound(n_valid: int, bucket: int, max_len: int) -> int:
+    """Round the live-token count up to a bucket multiple (static per
+    compilation), capped at the cache length."""
+    return min(max_len, -(-n_valid // bucket) * bucket)
+
+
+def greedy_generate(api, params, prompts, gen_len: int, max_len: int,
+                    kv_bucket: int = 0):
+    """Batched greedy decoding: prefill the prompt batch, then ``gen_len``
+    fused decode steps.  Returns (B, gen_len) int32 tokens.
+
+    ``kv_bucket`` > 0 bounds each decode step's cache read to the written
+    prefix rounded up to a bucket multiple (one retrace per bucket), so
+    int8/bcq4 dequantization stops paying for unwritten positions.  Only
+    attention-cache families accept the bound."""
+    b, s = prompts.shape
+    logits, caches = jax.jit(lambda p, t: api.prefill_fn(p, {"tokens": t}, max_len))(
+        params, prompts
+    )
+    out = [next_greedy_tokens(logits)]
+    if kv_bucket:
+        step = jax.jit(
+            lambda p, c, t, pos, kb: api.decode_fn(p, c, t, pos, kv_bound=kb),
+            static_argnums=(4,),
+        )
+    else:
+        step = jax.jit(api.decode_fn)
+    for t in range(gen_len - 1):
+        pos = s + t
+        if kv_bucket:
+            kb = kv_bucket_bound(pos + 1, kv_bucket, max_len)
+            logits, caches = step(params, caches, out[-1][:, None], jnp.int32(pos), kb)
+        else:
+            logits, caches = step(params, caches, out[-1][:, None], jnp.int32(pos))
+        out.append(next_greedy_tokens(logits))
+    return jnp.stack(out, 1)

@@ -1,0 +1,123 @@
+"""Page allocator + block-table page ops for the paged KV-cache.
+
+The **page** is the unit of KV memory management (vLLM-style): a fixed
+block of ``page_size`` tokens × n_kv heads × head_dim per layer, stored in
+whatever the Runtime's cache kind is (bf16 / int8 / packed-BCQ4) with its
+per-page scale/selector metadata riding along — the pool tree is literally
+``cache_init(n_pages, page_size, ...)`` stacked over layers, so all three
+quant layouts come for free.  ``page_size · d_head`` is always an integer
+number of BCQ block arrays (L_A scalars), so a page boundary never splits
+a block array and pages dequantize independently.
+
+Page id 0 is reserved as the **null page**: block-table padding and
+inactive decode slots point at it, so scatters from idle slots land in a
+sacrificial page instead of live data.
+
+``PagePool`` is the host-side allocator (free list + refcounts; shared
+prefix pages are refcounted and copy-on-write).  The jnp helpers below do
+the device-side page movement and are shape-stable for jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+NULL_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Host-side page allocator: free list + per-page refcounts.
+
+    Pure bookkeeping — holds no array data.  Page 0 (null) is never
+    handed out.  ``deref`` returns True when the count hits zero; the
+    caller decides whether the page goes back to the free list
+    (``release``) or is kept reclaimable by the prefix cache."""
+
+    n_pages: int
+
+    def __post_init__(self):
+        assert self.n_pages >= 2, "need at least the null page + one real page"
+        self.free: list[int] = list(range(self.n_pages - 1, 0, -1))
+        self.refcount = np.zeros(self.n_pages, np.int32)
+
+    # -------------------------------------------------------------- alloc
+    def available(self) -> int:
+        return len(self.free)
+
+    def alloc(self) -> int | None:
+        """Pop a free page with refcount 1, or None when dry."""
+        if not self.free:
+            return None
+        pid = self.free.pop()
+        assert self.refcount[pid] == 0
+        self.refcount[pid] = 1
+        return pid
+
+    def ref(self, pid: int) -> None:
+        assert pid != NULL_PAGE and self.refcount[pid] > 0
+        self.refcount[pid] += 1
+
+    def revive(self, pid: int) -> None:
+        """Re-activate a reclaimable page (refcount 0, parked outside the
+        free list by the prefix cache) without touching its contents."""
+        assert pid != NULL_PAGE and self.refcount[pid] == 0 and pid not in self.free
+        self.refcount[pid] = 1
+
+    def deref(self, pid: int) -> bool:
+        assert pid != NULL_PAGE and self.refcount[pid] > 0
+        self.refcount[pid] -= 1
+        return self.refcount[pid] == 0
+
+    def release(self, pid: int) -> None:
+        """Return a refcount-0 page to the free list."""
+        assert pid != NULL_PAGE and self.refcount[pid] == 0
+        self.free.append(pid)
+
+    def used(self) -> int:
+        return self.n_pages - 1 - len(self.free)
+
+
+# ----------------------------------------------------------- jnp page ops
+def scatter_prefill_pages(pool, cache1, page_ids):
+    """Copy a per-request prefill cache into pool pages.
+
+    pool: stacked pool tree, leaves (L, P, ps, ...); cache1: per-request
+    prefill cache, leaves (L, 1, S, ...) with S == len(page_ids)·ps;
+    page_ids: (MAXP,) int32 destination page per prompt chunk — entries of
+    NULL_PAGE skip that chunk (prefix-cache hits, beyond-prompt padding)
+    by scattering it into the sacrificial null page.  Shape-stable: one
+    compilation regardless of prompt length or hit pattern."""
+    out = {}
+    for n, leaf in pool.items():
+        src = cache1[n]
+        if getattr(src, "ndim", 0) < 3:  # per-tensor scales: pool-global
+            out[n] = leaf
+            continue
+        ps = leaf.shape[2]
+        lead, s = src.shape[0], src.shape[2]
+        pages = src.reshape((lead, s // ps, ps) + src.shape[3:])
+        out[n] = leaf.at[:, page_ids].set(pages.astype(leaf.dtype))
+    return out
+
+
+def copy_page(pool, src, dst):
+    """Copy-on-write: duplicate page ``src`` into ``dst`` across layers.
+    ``src``/``dst`` may be traced scalars (one compilation for all pairs)."""
+    out = {}
+    for n, leaf in pool.items():
+        if getattr(leaf, "ndim", 0) < 3:
+            out[n] = leaf
+        else:
+            out[n] = leaf.at[:, dst].set(leaf[:, src])
+    return out
+
+
+def as_block_table_array(tables: np.ndarray) -> jnp.ndarray:
+    return jnp.asarray(tables, jnp.int32)

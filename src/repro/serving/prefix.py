@@ -1,0 +1,102 @@
+"""Prefix caching: share immutable full KV pages across requests.
+
+Prompt tokens are chunked into full pages; each chunk is keyed by the
+**chain hash** of every token up to and including it, so a page is only
+reused when the entire prefix matches (position-dependent RoPE and causal
+attention make KV content a function of the whole prefix).  Because cache
+quantization is deterministic (per-token scales, fixed per-tensor s_X),
+two requests with identical prefixes produce bit-identical pages — sharing
+is exact, not approximate.
+
+Lifecycle: a freshly written full page is *registered* (refcount 1, owned
+by its request).  Later requests that hit it take a reference
+(``PagePool.ref``) instead of recomputing/rewriting storage.  When the
+last owner finishes, the page is *reclaimable*: it keeps its contents and
+registration, parked in an LRU, and can be either revived by a future hit
+or evicted (LRU order) when the allocator runs dry.  Shared pages are
+immutable; writers must copy-on-write (the engine's tail pages are always
+private, so COW only triggers on forked/defensive paths).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable, Optional
+
+from repro.serving.pages import NULL_PAGE
+
+
+def chain_hash(prev: int, chunk: Iterable[int]) -> int:
+    """Hash of a prompt chunk conditioned on everything before it."""
+    return hash((prev, tuple(int(t) for t in chunk)))
+
+
+def chunk_hashes(prompt, page_size: int) -> list[int]:
+    """Chain hashes of every FULL page-sized chunk of ``prompt``."""
+    out, h = [], 0
+    for c in range(len(prompt) // page_size):
+        h = chain_hash(h, prompt[c * page_size : (c + 1) * page_size])
+        out.append(h)
+    return out
+
+
+class PrefixCache:
+    """chain-hash → page-id map with an LRU of reclaimable pages."""
+
+    def __init__(self):
+        self.by_hash: dict[int, int] = {}
+        self.hash_of: dict[int, int] = {}
+        self.reclaimable: OrderedDict[int, None] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def peek(self, h: int) -> Optional[int]:
+        """Non-mutating probe: page holding this chunk, or None.  Use for
+        admission planning — no stats, no LRU movement."""
+        return self.by_hash.get(h)
+
+    def lookup(self, h: int) -> Optional[int]:
+        """Page holding this chunk, or None.  Revives reclaimable pages
+        (caller must take a PagePool reference via ``PagePool.revive`` /
+        ``PagePool.ref``).  Call only when committing to use the page."""
+        pid = self.by_hash.get(h)
+        if pid is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+            self.reclaimable.pop(pid, None)  # back in active use
+        return pid
+
+    def register(self, h: int, pid: int) -> None:
+        assert pid != NULL_PAGE
+        # A racing identical registration keeps the earlier page.
+        if h not in self.by_hash and pid not in self.hash_of:
+            self.by_hash[h] = pid
+            self.hash_of[pid] = h
+
+    def knows(self, pid: int) -> bool:
+        return pid in self.hash_of
+
+    def mark_reclaimable(self, pid: int) -> None:
+        """Refcount hit zero but contents stay cached (MRU end of LRU)."""
+        assert pid in self.hash_of
+        self.reclaimable[pid] = None
+        self.reclaimable.move_to_end(pid)
+
+    def evict_one(self) -> Optional[int]:
+        """Drop the LRU reclaimable page; returns its id (now unregistered,
+        refcount 0 — caller pushes it back to the allocator free list)."""
+        if not self.reclaimable:
+            return None
+        pid, _ = self.reclaimable.popitem(last=False)
+        self.forget(pid)
+        return pid
+
+    def forget(self, pid: int) -> None:
+        """Remove a page's registration (eviction or COW replacement)."""
+        h = self.hash_of.pop(pid, None)
+        if h is not None:
+            self.by_hash.pop(h, None)
+        self.reclaimable.pop(pid, None)
+
+    def reclaimable_count(self) -> int:
+        return len(self.reclaimable)

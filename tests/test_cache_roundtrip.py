@@ -1,0 +1,96 @@
+"""cache_init / cache_write / cache_read round-trips for every cache kind,
+plus the bounded-prefix (valid_len) read and the page-pool layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bcq import BCQConfig
+from repro.core.calibrate import default_universal_codebooks
+from repro.models import layers
+
+CFG = BCQConfig()
+CB = default_universal_codebooks(CFG).as_jnp()
+B, S, H, D = 2, 16, 2, 32
+KINDS = ("bf16", "int8", "bcq4")
+
+
+def _filled_cache(kind, key=0, n_prompt=5):
+    k = jax.random.normal(jax.random.PRNGKey(key), (B, n_prompt, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(key + 1), (B, n_prompt, H, D))
+    cache = layers.cache_init(B, S, H, D, kind, CFG)
+    cache = layers.cache_write(cache, k, v, 0, kind, CFG, CB)
+    return cache, k, v
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_write_read_roundtrip(kind):
+    """Written prefix dequantizes close to the source; quant error is
+    bounded by the format's step size."""
+    cache, k, v = _filled_cache(kind)
+    kf, vf = layers.cache_read(cache, kind, CFG, CB, jnp.float32)
+    assert kf.shape == (B, S, H, D)
+    n = k.shape[1]
+    tol = {"bf16": 1e-2, "int8": 2e-2, "bcq4": 0.2}[kind]
+    for got, ref in ((kf[:, :n], k), (vf[:, :n], v)):
+        err = jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref))
+        assert float(err) < tol, (kind, float(err))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_unwritten_positions_decode_to_zero(kind):
+    cache, k, _ = _filled_cache(kind)
+    kf, vf = layers.cache_read(cache, kind, CFG, CB, jnp.float32)
+    n = k.shape[1]
+    assert float(jnp.max(jnp.abs(kf[:, n:]))) == 0.0
+    assert float(jnp.max(jnp.abs(vf[:, n:]))) == 0.0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_decode_append_matches_bulk_write(kind):
+    """Token-at-a-time writes produce bit-identical cache reads to one bulk
+    write (the paged/contiguous equivalence precondition)."""
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, 4, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, 4, H, D))
+    bulk = layers.cache_write(layers.cache_init(B, S, H, D, kind, CFG), k, v, 0, kind, CFG, CB)
+    step = layers.cache_init(B, S, H, D, kind, CFG)
+    for t in range(4):
+        step = layers.cache_write(step, k[:, t : t + 1], v[:, t : t + 1], t, kind, CFG, CB)
+    kb, vb = layers.cache_read(bulk, kind, CFG, CB, jnp.float32)
+    ks, vs = layers.cache_read(step, kind, CFG, CB, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(vb), np.asarray(vs))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_valid_len_bounds_the_read(kind):
+    """cache_read(valid_len=n) equals the full read sliced to n — the
+    dequant then never touches unwritten positions."""
+    cache, _, _ = _filled_cache(kind)
+    kf, vf = layers.cache_read(cache, kind, CFG, CB, jnp.float32)
+    kb, vb = layers.cache_read(cache, kind, CFG, CB, jnp.float32, valid_len=8)
+    assert kb.shape == (B, 8, H, D)
+    np.testing.assert_array_equal(np.asarray(kf[:, :8]), np.asarray(kb))
+    np.testing.assert_array_equal(np.asarray(vf[:, :8]), np.asarray(vb))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_paged_pool_gather_matches_contiguous(kind):
+    """Scattering tokens into pages + block-table gather reproduces the
+    contiguous cache read exactly."""
+    ps, n_pages = 8, 4
+    cache, k, v = _filled_cache(kind, n_prompt=S)  # fill all 16 positions
+    pool = layers.cache_init(n_pages, ps, H, D, kind, CFG)
+    # one sequence spanning pages 1 and 2, written one token at a time
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    kq, vq = k[:1], v[:1]
+    for t in range(S):
+        page_ids = bt[jnp.arange(1), jnp.asarray([t]) // ps]
+        pool = layers.paged_token_write(
+            pool, kq[:, t : t + 1], vq[:, t : t + 1], page_ids,
+            jnp.asarray([t % ps]), kind, CFG, CB,
+        )
+    kg, vg = layers.paged_gather_kv(pool, bt, kind, CFG, CB, jnp.float32)
+    kc, vc = layers.cache_read(cache, kind, CFG, CB, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kg[0]), np.asarray(kc[0]))
+    np.testing.assert_array_equal(np.asarray(vg[0]), np.asarray(vc[0]))
