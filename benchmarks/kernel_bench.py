@@ -1,16 +1,58 @@
 """§3 on-the-fly quantization cost: kernel + reference micro-benchmarks.
 
 CPU timings (interpret-mode Pallas is a correctness vehicle, not perf) —
-the derived column reports work sizes so TPU projections can be made from
-the roofline constants.
+the derived columns report work sizes and an *analytic* HBM-bytes-per-GEMM
+model so TPU projections can be made from the roofline constants.  The
+fused-vs-two-launch comparison and the per-stream HBM breakdown are also
+written to ``BENCH_kernels.json``.
 """
+import json
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import codebooks_for, emit, llm_like_operand, timeit
 from repro.core import bcq
 from repro.core.bcq import BCQConfig
 from repro.kernels import ops
+
+
+def hbm_bytes_per_linear(
+    m: int, k: int, n: int, cfg: BCQConfig,
+    tile_m: int = 128, tile_n: int = 128, tile_k: int = 512, act_bytes: int = 4,
+) -> dict:
+    """Analytic HBM traffic of one (M, K)·(N, K)ᵀ W4A4 linear, per path.
+
+    Counts every stream with its grid re-fetch multiplicity (a tile is
+    DMA'd again whenever its block index changes between consecutive grid
+    steps).  Packed operands carry idx (4 bit) + sel (4/2Lb bit) + f32
+    per-array inv scales.
+    """
+    nt_m, nt_n = -(-m // tile_m), -(-n // tile_n)
+
+    def packed_bytes(rows):
+        return rows * (k // 2 + k // (2 * cfg.block_len) + 4 * (k // cfg.array_len))
+
+    out = m * n * 4
+    two = {
+        "raw_act_read": m * k * act_bytes,            # quantize launch, 1×
+        "packed_act": packed_bytes(m) * (1 + nt_n),   # write + N-tile re-reads
+        "packed_weight": packed_bytes(n) * nt_m,      # M-tile re-reads
+        "out": out,
+    }
+    fused = {
+        # full-K slab, block index = M tile only: fetched once per linear
+        # when M is a single tile (serving decode); multi-M-tile prefill
+        # re-streams the slab per N tile like any GEMM operand
+        "raw_act_read": m * k * act_bytes * (1 if nt_m == 1 else nt_n),
+        "packed_act": 0,                              # never leaves VMEM
+        "packed_weight": packed_bytes(n) * nt_m,
+        "out": out,
+    }
+    for d in (two, fused):
+        d["total"] = sum(d.values())
+    return {"two_launch": two, "fused": fused}
 
 
 def run(fast=False):
@@ -19,6 +61,7 @@ def run(fast=False):
     m, k, n = 256, 4096, 1024
     x = llm_like_operand(jax.random.PRNGKey(0), (m, k))
     w = llm_like_operand(jax.random.PRNGKey(1), (n, k))
+    report = {"shape": {"m": m, "k": k, "n": n}, "cfg": cfg.tag()}
 
     fq = jax.jit(lambda v: bcq.fake_quant(v, cb, cfg))
     us, _ = timeit(fq, x)
@@ -33,12 +76,57 @@ def run(fast=False):
     us, _ = timeit(mm, pa)
     emit("kernel_w4a4_matmul_ref", us, f"{m}x{n}x{k} {2*m*n*k/us/1e6:.2f} GFLOP/s-cpu")
 
+    # --- fused single-launch linear vs the two-launch pipeline ------------
+    two = jax.jit(lambda v: ops.w4a4_linear(v, pw, cb, cfg, impl="ref"))
+    us_two, o_two = timeit(two, x)
+    emit("kernel_w4a4_two_launch_ref", us_two, f"{m}x{n}x{k} quantize+matmul launches")
+    fused = jax.jit(lambda v: ops.w4a4_linear_fused(v, pw, cb, cfg, impl="ref"))
+    us_fused, o_fused = timeit(fused, x)
+    bitexact = bool(jnp.all(o_two == o_fused))
+    emit(
+        "kernel_w4a4_fused_ref", us_fused,
+        f"{m}x{n}x{k} single launch bitexact_vs_two_launch={bitexact}",
+    )
+    report["timings_us"] = {"two_launch_ref": us_two, "fused_ref": us_fused}
+    report["fused_bitexact_vs_two_launch"] = bitexact
+
+    # analytic HBM traffic per linear (serving decode + prefill shapes)
+    report["hbm_bytes_per_linear"] = {}
+    for tag, (bm, bk, bn) in (("decode_128", (128, k, n)), (f"prefill_{m}", (m, k, n))):
+        hbm = hbm_bytes_per_linear(bm, bk, bn, cfg)
+        report["hbm_bytes_per_linear"][tag] = hbm
+        emit(
+            f"kernel_hbm_analytic_{tag}", 0.0,
+            f"two_launch={hbm['two_launch']['total']}B fused={hbm['fused']['total']}B "
+            f"fused_packed_act=0B w_stream={hbm['fused']['packed_weight']}B",
+        )
+
     if not fast:
         us, _ = timeit(
             lambda: ops.quantize(x[:128, :2048], cb, cfg, impl="pallas", tile_m=64, tile_k=512),
             warmup=1, iters=2,
         )
         emit("kernel_quantize_pallas_interp", us, "128x2048 interpret-mode (correctness vehicle)")
+        pw_s = ops.quantize(w[:128, :1024], cb, cfg, impl="pallas", tile_m=64, tile_k=512)
+        us, _ = timeit(
+            lambda: ops.w4a4_linear_fused(
+                x[:128, :1024], pw_s, cb, cfg, impl="pallas",
+                tile_m=64, tile_n=64, tile_k=512,
+            ),
+            warmup=1, iters=2,
+        )
+        emit("kernel_fused_pallas_interp", us, "128x128x1024 interpret-mode (correctness vehicle)")
     bf = jax.jit(lambda a, b: a @ b.T)
     us, _ = timeit(bf, x, w)
     emit("kernel_bf16_matmul_xla", us, f"{m}x{n}x{k} baseline")
+    report["timings_us"]["bf16_matmul_xla"] = us
+
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    emit("kernel_bench_json", 0.0, "wrote BENCH_kernels.json")
+
+
+if __name__ == "__main__":
+    np.set_printoptions(suppress=True)
+    print("name,us_per_call,derived")
+    run(fast=True)

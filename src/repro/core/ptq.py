@@ -77,6 +77,43 @@ def encode_params(
     return out
 
 
+def pack_params(
+    params: Any,
+    codebooks: jax.Array,
+    cfg: bcq.BCQConfig,
+    predicate: Callable[[str, Any], bool] = _is_gemm_weight,
+) -> Any:
+    """Structural conversion to the ``quant_mode='packed'`` param tree.
+
+    Every GEMM ``kernel`` leaf (d_in, d_out) is replaced by the
+    ``kernel_packed`` dict of 4-bit buffers that packed-mode models expect
+    (models/layers.init_qdense layout); MoE expert stacks (E, d_in, d_out)
+    pack per expert (per-expert s_X), leaves gaining a leading E axis.
+    Non-GEMM leaves pass through unchanged."""
+    from repro.models import layers as _layers
+
+    def pack_leaf(leaf):
+        if leaf.ndim == 3:  # MoE expert stack
+            return jax.vmap(lambda w: _layers.pack_weight(w, cfg, codebooks))(leaf)
+        return _layers.pack_weight(leaf, cfg, codebooks)
+
+    def walk(tree, path=""):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            p = f"{path}/{k}"
+            if isinstance(v, dict):
+                out[k] = walk(v, p)
+            elif k == "kernel" and predicate(p, v):
+                out["kernel_packed"] = pack_leaf(v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(params)
+
+
 def count_quantized_bits(params: Any, cfg: bcq.BCQConfig) -> dict:
     """Storage accounting: bf16 baseline vs LO-BCQ bits (Eq. 9) per tree."""
     total, quant = 0, 0

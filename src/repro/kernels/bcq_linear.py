@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: fused W4A4 linear — quantize→decode→GEMM in ONE launch.
+
+DESIGN
+======
+
+``out = Â · Ŵᵀ`` where Â = LO-BCQ(x) is encoded **inside the kernel** and Ŵ
+arrives pre-packed (4-bit indices + selector/scale metadata).  The two-launch
+path (`bcq_quantize_pallas` + `bcq_matmul_pallas`) round-trips packed
+activations through HBM and re-decodes every weight tile O(M/TM) times with
+an O(N_c·2^B) masked-sum mux; this kernel removes both costs:
+
+1. **In-VMEM activation encode.**  The raw activation arrives as a full-K
+   (TM, K) VMEM slab whose block index depends only on the M tile, so Pallas
+   fetches it from HBM once per M tile (for the serving-decode hot path —
+   a single M tile — exactly once per linear, regardless of N/TN).  Each
+   (TM, TK) slice is encoded with `common.encode_tile` — the *same*
+   threshold-compare routine the standalone quantize kernel runs, so the
+   fused path is bit-exact with the two-launch path by construction.
+   Packed activations never touch HBM: the only activation HBM stream is
+   the raw bf16/f32 read.
+
+2. **One-hot MXU decode.**  Per scalar the decode is ``cb[sel·2^B + idx]``.
+   Instead of the N_c·2^B (~128 for the paper config) VPU compare+FMA passes
+   of the masked-sum mux, we fold the selector into a combined codeword
+   ``c = sel·2^B + idx`` and compute one
+   ``(T·TK, 2^B·N_c) · (2^B·N_c, 1)`` ``dot_general``: the one-hot row has a
+   single 1.0, so the matmul is an *exact* table lookup executed on the MXU
+   (2^B·N_c = 128 for the paper config — one systolic pass).  The one-hot is
+   materialized in row chunks of ≤4 MiB (common.onehot_decode), so VMEM
+   stays bounded for any tile size.
+
+3. **Weight tile decoded once per (j, s).**  Grid = (N/TN, M/TM, K/TK) —
+   N-**outer**, M-inner, K-innermost.  The decoded f32 weight tile for
+   (j, s) is written to a persistent VMEM scratch slab at the first M step
+   (i == 0) and reused for every M revisit, so decode cost is O(1) per
+   weight tile instead of O(M/TM).  The f32 output block (i, j) accumulates
+   across the innermost K steps (standard revolving accumulator).
+
+VMEM budget per core (defaults TM=TN=128, TK=512, paper cfg, K = d_model):
+
+  raw activation slab      TM·K·4         = K·512 B   (2 MiB @ K=4096)
+  packed weight tile       ~TN·TK·0.57    ≈  36 KiB
+  decoded-weight scratch   (K/TK)·TN·TK·4 = K·TN·4 B  (2 MiB @ K=4096)
+  one-hot decode chunk     ≤ 4 MiB (chunked, common.onehot_decode)
+  encode temporaries       ~3×TM·TK·4     ≈ 768 KiB
+  f32 out block            TM·TN·4        =  64 KiB
+
+≈ 9 MiB at K=4096 — inside the ~16 MiB VMEM envelope; both slabs scale
+linearly in K, so for very large K lower ``tile_m``/``tile_n``.
+
+HBM traffic per linear: the packed 4.5-bit weight stream + the raw
+activation read + the f32 output — no packed-activation round-trip.  For
+the serving decode hot path (M one tile) the activation slab's block index
+never changes across the whole grid, so the raw read happens exactly once;
+multi-M-tile prefill re-streams the slab per N tile like any GEMM operand.
+
+Bit-exactness vs the two-launch path: identical encode (shared
+`encode_tile`), identical decoded values (the one-hot dot reproduces
+``cb[sel·2^B+idx]`` exactly; additions of exact 0.0 products), identical
+dequant scales (same ``1/(ŝ_A·s_X)`` f32 arithmetic), and identical
+accumulation order over K — tested bitwise in tests/test_fused_linear.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bcq import BCQConfig
+from repro.kernels.common import (
+    encode_tile,
+    onehot_decode,
+    resolve_interpret,
+    unpack_u4,
+)
+
+
+def _fused_kernel(
+    x_ref, w_idx_ref, w_sel_ref, w_inv_ref, cb_ref, cbf_ref, sx_ref,
+    out_ref, w_cache, *, cfg: BCQConfig, tile_n: int, tile_k: int,
+):
+    i = pl.program_id(1)  # M tile (grid = (N/TN, M/TM, K/TK))
+    s = pl.program_id(2)  # K step
+    lb, la, ne = cfg.block_len, cfg.array_len, cfg.n_entries
+    cb = cb_ref[...]
+    cbf = cbf_ref[...]
+
+    # --- weight tile: decode once per (j, s), cached across M revisits ----
+    @pl.when(i == 0)
+    def _decode_weight():
+        w_idx = unpack_u4(w_idx_ref[...])                 # (TN, TK)
+        w_sel = unpack_u4(w_sel_ref[...])                 # (TN, TK/Lb)
+        code = jnp.repeat(w_sel, lb, axis=-1) * ne + w_idx
+        vals = onehot_decode(code, cbf)                   # (TN, TK) f32
+        inv = jnp.repeat(w_inv_ref[...], la, axis=-1)
+        w_cache[pl.ds(s * tile_n, tile_n), :] = vals * inv
+
+    # --- activation tile: encode in VMEM, decode via one-hot MXU ----------
+    # x_ref holds the full-K (TM, K) slab (fetched once per M tile); take
+    # this K step's (TM, TK) slice.
+    x = x_ref[:, pl.ds(s * tile_k, tile_k)].astype(jnp.float32)
+    s_x = sx_ref[0, 0]
+    idx, sel, ratio = encode_tile(x, cb, s_x, cfg, tile_k)
+    code = jnp.repeat(sel, lb, axis=-1) * ne + idx
+    a = onehot_decode(code, cbf) * jnp.repeat(1.0 / (ratio * s_x), la, axis=-1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_cache[pl.ds(s * tile_n, tile_n), :]
+    out_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "tile_m", "tile_n", "tile_k", "interpret"),
+)
+def bcq_linear_pallas(
+    x: jax.Array,
+    w_idx: jax.Array,
+    w_sel: jax.Array,
+    w_inv: jax.Array,
+    codebooks: jax.Array,
+    s_x: jax.Array,
+    cfg: BCQConfig,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused W4A4 linear: raw x (M, K) + packed weights (N rows) → f32 (M, N).
+
+    w_idx (N, K/2) u8, w_sel (N, K/2Lb) u8, w_inv (N, K/L_A) f32 = 1/(ŝ_A·s_X)
+    with padded-K arrays zeroed (they then contribute exact zeros regardless
+    of the activation tile's padding codes).  s_x: per-tensor activation
+    scale (global reduction, computed by the caller).  Caller pads to tile
+    multiples (ops.py).  ``interpret=None`` auto-detects the backend."""
+    m, k = x.shape
+    n = w_idx.shape[0]
+    assert m % tile_m == 0 and n % tile_n == 0 and k % tile_k == 0
+    assert tile_k % cfg.array_len == 0 and tile_k % (2 * cfg.block_len) == 0
+    spb = cfg.block_len * 2
+    n_k = k // tile_k
+    grid = (n // tile_n, m // tile_m, n_k)
+    cb = codebooks.astype(jnp.float32)
+    cb_flat = cb.reshape(-1, 1)
+    kernel = functools.partial(_fused_kernel, cfg=cfg, tile_n=tile_n, tile_k=tile_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda j, i, s: (i, 0)),
+            pl.BlockSpec((tile_n, tile_k // 2), lambda j, i, s: (j, s)),
+            pl.BlockSpec((tile_n, tile_k // spb), lambda j, i, s: (j, s)),
+            pl.BlockSpec((tile_n, tile_k // cfg.array_len), lambda j, i, s: (j, s)),
+            pl.BlockSpec(cb.shape, lambda j, i, s: (0, 0)),
+            pl.BlockSpec(cb_flat.shape, lambda j, i, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j, i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda j, i, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_k * tile_n, tile_k), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(x, w_idx, w_sel, w_inv, cb, cb_flat, s_x.reshape(1, 1).astype(jnp.float32))

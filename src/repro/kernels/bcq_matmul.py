@@ -14,7 +14,9 @@ Grid (M/TM, N/TN, K/TK), K innermost for revolving accumulation into the
   4. an (TM, TK)·(TN, TK)ᵀ dot_general accumulates in f32 on the MXU.
 
 HBM traffic per operand tile is the 4-bit packed stream + 0.5-bit metadata —
-the paper's compression is what the memory roofline sees.
+the paper's compression is what the memory roofline sees.  For the
+single-launch variant that also encodes the activations in VMEM (and
+replaces the masked-sum mux with a one-hot MXU decode) see bcq_linear.py.
 """
 from __future__ import annotations
 
@@ -25,20 +27,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.bcq import BCQConfig
-
-
-def _unpack_u4(p: jax.Array) -> jax.Array:
-    lo = (p & 0xF).astype(jnp.int32)
-    hi = (p >> 4).astype(jnp.int32)
-    t, n = p.shape
-    return jnp.stack([lo, hi], axis=-1).reshape(t, n * 2)
+from repro.kernels.common import resolve_interpret, unpack_u4
 
 
 def _decode_tile(idx_p, sel_p, inv_s, cb, cfg: BCQConfig):
     """(T, TK//2) packed idx + (T, TK/Lb/2) packed sel + (T, TK/L_A) inv scales
     → dequantized f32 (T, TK)."""
-    idx = _unpack_u4(idx_p)  # (T, TK)
-    sel = _unpack_u4(sel_p)  # (T, TK/Lb)
+    idx = unpack_u4(idx_p)  # (T, TK)
+    sel = unpack_u4(sel_p)  # (T, TK/Lb)
     t, tk = idx.shape
     lb, la, nc, ne = cfg.block_len, cfg.array_len, cfg.n_codebooks, cfg.n_entries
     idx_b = idx.reshape(t, tk // lb, lb)
@@ -90,11 +86,12 @@ def bcq_matmul_pallas(
     tile_m: int = 128,
     tile_n: int = 128,
     tile_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """W4A4 GEMM on packed operands. Shapes (packed along K):
     a_idx (M, K/2), a_sel (M, K/2Lb), a_inv (M, K/L_A); w_* likewise with N
-    rows.  Returns f32 (M, N).  Caller pads to tile multiples (ops.py)."""
+    rows.  Returns f32 (M, N).  Caller pads to tile multiples (ops.py).
+    ``interpret=None`` auto-detects the backend (native on TPU)."""
     m = a_idx.shape[0]
     n = w_idx.shape[0]
     k = a_idx.shape[1] * 2
@@ -118,5 +115,5 @@ def bcq_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a_idx, a_sel, a_inv, w_idx, w_sel, w_inv, codebooks_a, codebooks_w)

@@ -9,10 +9,12 @@ Per (TILE_M, TILE_K) VMEM tile (TILE_K a multiple of L_A):
      threshold compares, block MSE, running argmin over codebooks,
   4. bit-pack indices (2 per byte) and selectors and write out.
 
-This is the TPU-native replacement for a GPU LUT/gather design: everything
-is compare+select+FMA on the 8×128 VPU, which Mosaic lowers natively.
-On CPU we run it with ``interpret=True`` (tests assert exact equivalence
-with kernels/ref.py).
+Steps 1–3 are ``kernels/common.encode_tile`` — shared verbatim with the
+fused linear kernel (bcq_linear.py), so the two paths encode bit-identically
+by construction.  This is the TPU-native replacement for a GPU LUT/gather
+design: everything is compare+select+FMA on the 8×128 VPU, which Mosaic
+lowers natively.  Off-TPU the default is ``interpret`` mode (tests assert
+exact equivalence with kernels/ref.py).
 """
 from __future__ import annotations
 
@@ -23,62 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.bcq import BCQConfig
-
-_E4M3_MAX = 448.0
-_E4M3_MIN_SUB = 2.0**-9
-
-
-def _e4m3_snap(a: jax.Array) -> jax.Array:
-    """Inline E4M3 round-to-nearest for positive values (kernel-safe ops)."""
-    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1e-38))), -6.0, 8.0)
-    ulp = jnp.exp2(e - 3.0)
-    q = jnp.round(a / ulp) * ulp
-    q = jnp.minimum(q, _E4M3_MAX)
-    return jnp.maximum(q, _E4M3_MIN_SUB)
-
-
-def _pack_u4(x: jax.Array) -> jax.Array:
-    """(T, 2n) uint values < 16 → (T, n) packed uint8, low nibble first."""
-    x = x.astype(jnp.uint8)
-    lo = x[:, 0::2]
-    hi = x[:, 1::2]
-    return (hi << 4) | lo
+from repro.kernels.common import encode_tile, pack_u4, resolve_interpret
 
 
 def _quantize_kernel(x_ref, cb_ref, sx_ref, idx_ref, sel_ref, ratio_ref, *, cfg: BCQConfig, tile_k: int):
     x = x_ref[...].astype(jnp.float32)  # (TM, TK)
-    tm = x.shape[0]
-    la, lb, nc, ne = cfg.array_len, cfg.block_len, cfg.n_codebooks, cfg.n_entries
-    na = tile_k // la
-    s_x = sx_ref[0, 0]
-    cb = cb_ref[...]  # (N_c, 2^B), sorted rows
-
-    arrays = x.reshape(tm, na, la)
-    amax = jnp.max(jnp.abs(arrays), axis=-1)
-    s_a = jnp.where(amax > 0, cfg.codeword_max / amax, s_x)
-    ratio = _e4m3_snap(s_a / s_x)
-    y = arrays * (ratio * s_x)[..., None]
-    blocks = y.reshape(tm, na * (la // lb), lb)
-
-    best_err = jnp.full(blocks.shape[:-1], jnp.inf, jnp.float32)
-    best_sel = jnp.zeros(blocks.shape[:-1], jnp.int32)
-    best_idx = jnp.zeros(blocks.shape, jnp.int32)
-    for i in range(nc):  # unrolled: N_c ≤ 16
-        lv = [cb[i, t] for t in range(ne)]
-        idx = jnp.zeros(blocks.shape, jnp.int32)
-        for t in range(ne - 1):  # nearest sorted entry via threshold compares
-            idx += (blocks >= 0.5 * (lv[t] + lv[t + 1])).astype(jnp.int32)
-        q = jnp.zeros(blocks.shape, jnp.float32)
-        for t in range(ne):  # masked-sum decode (no gather on TPU)
-            q += jnp.where(idx == t, lv[t], 0.0)
-        err = jnp.sum((blocks - q) ** 2, axis=-1)
-        take = err < best_err
-        best_err = jnp.where(take, err, best_err)
-        best_sel = jnp.where(take, i, best_sel)
-        best_idx = jnp.where(take[..., None], idx, best_idx)
-
-    idx_ref[...] = _pack_u4(best_idx.reshape(tm, tile_k))
-    sel_ref[...] = _pack_u4(best_sel.reshape(tm, na * (la // lb)))
+    idx, sel, ratio = encode_tile(x, cb_ref[...], sx_ref[0, 0], cfg, tile_k)
+    idx_ref[...] = pack_u4(idx)
+    sel_ref[...] = pack_u4(sel)
     ratio_ref[...] = ratio
 
 
@@ -92,10 +46,11 @@ def bcq_quantize_pallas(
     cfg: BCQConfig,
     tile_m: int = 128,
     tile_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Encode x (M, K) → (idx_packed, sel_packed, ratio). M % tile_m == 0,
-    K % tile_k == 0, tile_k % L_A == 0 (caller pads, see ops.py)."""
+    K % tile_k == 0, tile_k % L_A == 0 (caller pads, see ops.py).
+    ``interpret=None`` auto-detects the backend (native on TPU)."""
     m, k = x.shape
     assert m % tile_m == 0 and k % tile_k == 0 and tile_k % cfg.array_len == 0
     grid = (m // tile_m, k // tile_k)
@@ -119,5 +74,5 @@ def bcq_quantize_pallas(
             jax.ShapeDtypeStruct((m, k // bpb), jnp.uint8),
             jax.ShapeDtypeStruct((m, k // cfg.array_len), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, codebooks, s_x.reshape(1, 1).astype(jnp.float32))

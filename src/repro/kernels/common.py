@@ -1,0 +1,134 @@
+"""Shared helpers for the LO-BCQ Pallas kernels.
+
+Single home for the pieces that used to be copy-pasted across
+``bcq_quantize.py`` / ``bcq_matmul.py`` (and mirrored in ``ref.py``):
+
+* nibble packing (``pack_u4`` / ``unpack_u4``),
+* the kernel-safe E4M3 round-to-nearest (``e4m3_snap``),
+* backend-aware ``interpret`` resolution (``resolve_interpret``),
+* the threshold-compare LO-BCQ encode of one VMEM tile (``encode_tile``),
+  used by both the standalone quantize kernel and the fused linear kernel —
+  sharing the code is what makes the two paths bit-exact by construction,
+* the one-hot → codebook ``dot_general`` decode (``onehot_decode``) that
+  turns per-scalar codeword lookup into MXU work (see bcq_linear.py DESIGN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcq import BCQConfig
+
+_E4M3_MAX = 448.0
+_E4M3_MIN_SUB = 2.0**-9
+
+# VMEM transient budget for one one-hot decode pass (bytes of f32 one-hot);
+# onehot_decode chunks its row dimension so a single (rows·C, N_c·2^B) mask
+# never exceeds this.
+_ONEHOT_PASS_BYTES = 4 << 20
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None → interpret off TPU, native on TPU (a direct TPU call can never
+    silently run interpret mode); an explicit bool wins."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def e4m3_snap(a: jax.Array) -> jax.Array:
+    """Inline E4M3 round-to-nearest for positive values (kernel-safe ops)."""
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1e-38))), -6.0, 8.0)
+    ulp = jnp.exp2(e - 3.0)
+    q = jnp.round(a / ulp) * ulp
+    q = jnp.minimum(q, _E4M3_MAX)
+    return jnp.maximum(q, _E4M3_MIN_SUB)
+
+
+def pack_u4(x: jax.Array) -> jax.Array:
+    """(T, 2n) uint values < 16 → (T, n) packed uint8, low nibble first."""
+    x = x.astype(jnp.uint8)
+    lo = x[:, 0::2]
+    hi = x[:, 1::2]
+    return (hi << 4) | lo
+
+
+def unpack_u4(p: jax.Array) -> jax.Array:
+    """(T, n) packed uint8 → (T, 2n) int32 nibbles, low nibble first."""
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = (p >> 4).astype(jnp.int32)
+    t, n = p.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(t, n * 2)
+
+
+def encode_tile(x: jax.Array, cb: jax.Array, s_x: jax.Array, cfg: BCQConfig, tile_k: int):
+    """LO-BCQ encode of one (TM, TK) f32 tile resident in VMEM.
+
+    Per block array: |max| reduce → ŝ_A = E4M3(s_A/s_X); per codebook
+    (unrolled, N_c ≤ 16): per-scalar nearest sorted entry via 2^B−1
+    threshold compares, block MSE, running argmin over codebooks.  All
+    compare+select+FMA on the VPU — no gather.
+
+    Returns (idx (TM, TK) i32, sel (TM, TK/L_b) i32, ratio (TM, TK/L_A) f32).
+    """
+    tm = x.shape[0]
+    la, lb, nc, ne = cfg.array_len, cfg.block_len, cfg.n_codebooks, cfg.n_entries
+    na = tile_k // la
+
+    arrays = x.reshape(tm, na, la)
+    amax = jnp.max(jnp.abs(arrays), axis=-1)
+    s_a = jnp.where(amax > 0, cfg.codeword_max / amax, s_x)
+    ratio = e4m3_snap(s_a / s_x)
+    y = arrays * (ratio * s_x)[..., None]
+    blocks = y.reshape(tm, na * (la // lb), lb)
+
+    best_err = jnp.full(blocks.shape[:-1], jnp.inf, jnp.float32)
+    best_sel = jnp.zeros(blocks.shape[:-1], jnp.int32)
+    best_idx = jnp.zeros(blocks.shape, jnp.int32)
+    for i in range(nc):  # unrolled: N_c ≤ 16
+        lv = [cb[i, t] for t in range(ne)]
+        idx = jnp.zeros(blocks.shape, jnp.int32)
+        for t in range(ne - 1):  # nearest sorted entry via threshold compares
+            idx += (blocks >= 0.5 * (lv[t] + lv[t + 1])).astype(jnp.int32)
+        q = jnp.zeros(blocks.shape, jnp.float32)
+        for t in range(ne):  # masked-sum decode (no gather on TPU)
+            q += jnp.where(idx == t, lv[t], 0.0)
+        err = jnp.sum((blocks - q) ** 2, axis=-1)
+        take = err < best_err
+        best_err = jnp.where(take, err, best_err)
+        best_sel = jnp.where(take, i, best_sel)
+        best_idx = jnp.where(take[..., None], idx, best_idx)
+
+    return (
+        best_idx.reshape(tm, tile_k),
+        best_sel.reshape(tm, na * (la // lb)),
+        ratio,
+    )
+
+
+def onehot_decode(code: jax.Array, cb_flat: jax.Array) -> jax.Array:
+    """Decode combined codewords via a one-hot · codebook matmul (MXU).
+
+    code: (T, C) int32 combined codeword sel·2^B + idx per scalar;
+    cb_flat: (N_c·2^B, 1) f32 flattened codebook table.  Returns f32 (T, C)
+    with value cb_flat[code] — exact, because the one-hot row has a single
+    1.0 and every other product is an exact 0.0.
+
+    The (rows·C, N_c·2^B) one-hot is materialized in row chunks so a pass
+    stays under ``_ONEHOT_PASS_BYTES`` of VMEM (see bcq_linear.py DESIGN).
+    """
+    t, c = code.shape
+    n = cb_flat.shape[0]
+    rows = max(1, _ONEHOT_PASS_BYTES // (4 * c * n))
+    rows = min(rows, t)
+    while t % rows:  # static: largest divisor of T under the budget
+        rows -= 1
+    dnums = (((1,), (0,)), ((), ()))
+    chunks = []
+    for r0 in range(0, t, rows):
+        blk = code[r0 : r0 + rows].reshape(rows * c, 1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (rows * c, n), 1)
+        oh = (blk == col).astype(jnp.float32)
+        v = jax.lax.dot_general(oh, cb_flat, dnums, preferred_element_type=jnp.float32)
+        chunks.append(v.reshape(rows, c))
+    return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=0)

@@ -69,10 +69,14 @@ def flash_attention_pallas(
     causal: bool = True,
     tq: int = 128,
     tk: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """q: (BH, Sq, dh); k/v: (BH, Skv, dh) → (BH, Sq, dh).
-    Sq % tq == 0 and Skv % tk == 0 (wrapper in models pads)."""
+    Sq % tq == 0 and Skv % tk == 0 (wrapper in models pads).
+    ``interpret=None`` auto-detects the backend (native on TPU)."""
+    from repro.kernels.common import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     bh, sq, dh = q.shape
     skv = k.shape[1]
     assert sq % tq == 0 and skv % tk == 0
@@ -112,8 +116,6 @@ def flash_attention(q, k, v, causal=True, interpret=None):
     qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
     kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
     vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     tq = min(128, s)
     tk = min(128, k.shape[1])
     out = flash_attention_pallas(qt, kt, vt, causal=causal, tq=tq, tk=tk, interpret=interpret)

@@ -14,9 +14,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcq
+from repro.core import bcq, formats
 from repro.core.bcq import BCQConfig
 from repro.kernels import ref
+from repro.kernels.bcq_linear import bcq_linear_pallas
 from repro.kernels.bcq_matmul import bcq_matmul_pallas
 from repro.kernels.bcq_quantize import bcq_quantize_pallas
 
@@ -78,7 +79,6 @@ def quantize(
         xp = _pad2d(xf, tile_m, tile_k)
         idx_p, sel_p, ratio = bcq_quantize_pallas(
             xp, codebooks, s_x, cfg, tile_m=tile_m, tile_k=tile_k,
-            interpret=jax.default_backend() != "tpu",
         )
     inv = 1.0 / (ratio * s_x)
     # zero padded-K arrays so they contribute nothing to matmuls
@@ -125,7 +125,6 @@ def matmul(
         wp.idx_packed, wp.sel_packed, wp.inv_scale,
         codebooks, codebooks, cfg,
         tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
-        interpret=jax.default_backend() != "tpu",
     )
     return out[: a.rows, : w.rows]
 
@@ -139,10 +138,71 @@ def w4a4_linear(
     impl: str | None = None,
 ) -> jax.Array:
     """Full LO-BCQ linear: on-the-fly activation quantization (dynamic s_X)
-    + W4A4 GEMM.  x: (..., K); weights pre-encoded (N, K).  Returns (..., N)."""
+    + W4A4 GEMM.  x: (..., K); weights pre-encoded (N, K).  Returns (..., N).
+
+    Two kernel launches (quantize, then matmul) — packed activations
+    round-trip through HBM.  Prefer :func:`w4a4_linear_fused`."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     a = quantize(x2, codebooks, cfg, impl=impl)
     out = matmul(a, w_packed, codebooks, cfg, impl=impl)
+    return out.reshape(*lead, -1).astype(x.dtype)
+
+
+def packed_operand(pk: dict) -> PackedOperand:
+    """View a model-side packed weight dict (models/layers.pack_weight
+    layout: idx / sel / E4M3 scale bits / s_x) as a kernel PackedOperand
+    with the dequant scales pre-inverted (zero where never written)."""
+    assert pk["idx"].ndim == 2, "packed_operand takes one (N, K) weight"
+    ratio = formats.bits_to_e4m3(pk["scale"])
+    inv = jnp.where(ratio > 0, 1.0 / (ratio * pk["s_x"]), 0.0)
+    n, kp2 = pk["idx"].shape
+    return PackedOperand(pk["idx"], pk["sel"], inv.astype(jnp.float32), kp2 * 2, n)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "tile_m", "tile_n", "tile_k"))
+def w4a4_linear_fused(
+    x: jax.Array,
+    w_packed: PackedOperand,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+    s_x: jax.Array | None = None,
+    impl: str | None = None,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 512,
+) -> jax.Array:
+    """Single-launch fused W4A4 linear (kernels/bcq_linear.py): the raw
+    activation tile is encoded in VMEM and both operands decode via the
+    one-hot MXU path — packed activations never touch HBM.  Bit-exact with
+    :func:`w4a4_linear` at matching tile sizes.  x: (..., K); weights
+    pre-encoded (N, K); ``s_x`` overrides the per-tensor activation scale
+    (defaults to the dynamic reduction over x).  Returns (..., N)."""
+    impl = impl or _default_impl()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    assert k == w_packed.k, "activation/weight reduction dims must match"
+    assert k % cfg.array_len == 0, "fused path requires K % L_A == 0"
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    rows = x2.shape[0]
+    if s_x is None:
+        s_x = bcq.tensor_scale(x2, cfg)
+    if impl == "ref":
+        out = ref.fused_linear_ref(
+            x2, w_packed.idx_packed, w_packed.sel_packed, w_packed.inv_scale,
+            codebooks, cfg, s_x, valid_k=k,
+        )
+    else:
+        spb = cfg.block_len * 2
+        xp = _pad2d(x2, tile_m, tile_k)
+        out = bcq_linear_pallas(
+            xp,
+            _pad2d(w_packed.idx_packed, tile_n, tile_k // 2),
+            _pad2d(w_packed.sel_packed, tile_n, tile_k // spb),
+            _pad2d(w_packed.inv_scale, tile_n, tile_k // cfg.array_len),
+            codebooks, s_x, cfg,
+            tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        )
+    out = out[:rows, : w_packed.rows]
     return out.reshape(*lead, -1).astype(x.dtype)

@@ -121,9 +121,10 @@ def paged_attention(
     import jax.experimental.pallas.tpu as pltpu
     import dataclasses as _dc
 
+    from repro.kernels.common import resolve_interpret
+
     b, h, d = q.shape
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     maxp = block_tables.shape[1]
 
     def page_spec(leaf):

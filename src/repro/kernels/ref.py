@@ -77,6 +77,35 @@ def inv_scale(ratio: jax.Array, s_x: jax.Array) -> jax.Array:
     return 1.0 / (ratio * s_x)
 
 
+@partial(jax.jit, static_argnames=("cfg", "valid_k"))
+def fused_linear_ref(
+    x: jax.Array,
+    w_idx: jax.Array,
+    w_sel: jax.Array,
+    w_inv: jax.Array,
+    codebooks: jax.Array,
+    cfg: BCQConfig,
+    s_x: jax.Array,
+    valid_k: int | None = None,
+) -> jax.Array:
+    """Oracle for the fused W4A4 linear (kernels/bcq_linear.py).
+
+    Encode x (M, Kp) on the fly, decode both operands, contract over K —
+    the jnp composition of quantize_ref + matmul_ref, so it is bit-exact
+    with the two-launch path by construction.  ``valid_k`` (static) zeroes
+    the activation dequant scale for padded-K arrays, matching the padding
+    contract of ops.quantize."""
+    idx_p, sel_p, ratio = quantize_ref(x, codebooks, cfg, s_x)
+    a_inv = inv_scale(ratio, s_x)
+    if valid_k is not None:
+        ka = x.shape[1] // cfg.array_len
+        valid = (jnp.arange(ka) * cfg.array_len) < valid_k
+        a_inv = a_inv * valid[None, :]
+    return matmul_ref(
+        idx_p, sel_p, a_inv, w_idx, w_sel, w_inv, codebooks, codebooks, cfg
+    )
+
+
 # ---------------------------------------------------- paged attention oracle
 def _dequant_pool_ref(pool: dict, nm: str, kind: str, cfg: BCQConfig) -> jax.Array:
     """Dequantize the whole page pool's K or V side to f32 (P, ps, H, D)."""

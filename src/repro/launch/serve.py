@@ -14,10 +14,15 @@ the bf16 baseline.
 control — and verifies its greedy outputs equal the contiguous path.
 ``--kv-bucket N`` bounds each contiguous decode step's cache read to the
 written prefix rounded up to N (bucketed dequantization).
+``--packed`` also serves through the true-storage path: weights held as
+packed 4-bit buffers and every linear dispatched to the fused
+quantize→decode→GEMM kernel (kernels/bcq_linear.py; ``--unfused`` falls
+back to in-graph decode_packed_weight + einsum for comparison).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -60,6 +65,10 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--kv-bucket", type=int, default=0,
                     help="bucketed decode cache reads (0 = full-cache reads)")
+    ap.add_argument("--packed", action="store_true",
+                    help="also serve with packed 4-bit weights (fused kernel path)")
+    ap.add_argument("--unfused", action="store_true",
+                    help="with --packed: use decode_packed_weight + einsum instead")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -107,6 +116,25 @@ def main():
     print(f"bf16   : {toks/t_ref:8.1f} tok/s (CPU emulation timing)")
     print(f"W4A4   : {toks/t_q:8.1f} tok/s (fake-quant path, cache={args.cache})")
     print(f"greedy token agreement W4A4 vs bf16: {agree*100:.1f}%")
+
+    if args.packed:
+        # true-storage serving: packed 4-bit weight buffers end-to-end,
+        # linears dispatched to the fused quantize→decode→GEMM kernel
+        rt_pk = dataclasses.replace(
+            rt_w4a4, quant_mode="packed", fused_linear=not args.unfused
+        )
+        api_pk = zoo.build(cfg, rt_pk)
+        params_pk = ptq.pack_params(params, cb, bcq_cfg)
+        params_pk["codebooks"] = cb
+        t0 = time.time()
+        got_pk = greedy_generate(api_pk, params_pk, prompts, args.gen, max_len)
+        t_pk = time.time() - t0
+        agree_pk = float(jnp.mean((got_pk == ref).astype(jnp.float32)))
+        print(
+            f"packed : {toks/t_pk:8.1f} tok/s "
+            f"({'fused w4a4_linear kernel' if not args.unfused else 'decode+einsum'}, "
+            f"4-bit weight buffers) agreement vs bf16: {agree_pk*100:.1f}%"
+        )
 
     if args.paged:
         # engine-vs-engine comparison (same per-request prefill and tick

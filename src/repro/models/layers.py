@@ -69,6 +69,13 @@ class Runtime:
     # (kernels/paged_attention.py) instead of the gather+dequant jnp path.
     # interpret-mode on CPU (tests); native on TPU.
     paged_kernel: bool = False
+    # route quant_mode='packed' linears through the fused single-launch
+    # quantize→decode→GEMM (kernels/bcq_linear.py) instead of the in-graph
+    # decode_packed_weight + einsum: raw activations encode in VMEM, both
+    # operands decode via the one-hot MXU path, packed activations never
+    # round-trip HBM.  Native Pallas on TPU; elsewhere the ref-oracle
+    # composition runs (bit-exact with the two-launch kernels).
+    fused_linear: bool = True
     mesh: Any = None  # required (hashable) when flash_decode is set
 
 
@@ -139,12 +146,28 @@ def decode_packed_weight(pk: dict, cfg: BCQConfig, cb: jax.Array) -> jax.Array:
     k = idx.shape[-1]
     nb = k // cfg.block_len
     sel = bcq.unpack_nibbles(pk["sel"]).astype(jnp.int32)[..., :nb]
-    ratio = formats.bits_to_e4m3(pk["scale"])  # (N, K/L_A)
+    ratio = formats.bits_to_e4m3(pk["scale"])  # (..., N, K/L_A)
     flat = cb.reshape(-1)
     sel_s = jnp.repeat(sel, cfg.block_len, axis=-1)
     vals = flat[sel_s * cfg.n_entries + idx]
-    inv = jnp.repeat(1.0 / (ratio * pk["s_x"]), cfg.array_len, axis=-1)
+    s_x = pk["s_x"]
+    if getattr(s_x, "ndim", 0):  # per-expert scales (E,) on stacked weights
+        s_x = s_x.reshape(s_x.shape + (1,) * (ratio.ndim - s_x.ndim))
+    inv = jnp.repeat(1.0 / (ratio * s_x), cfg.array_len, axis=-1)
     return vals * inv  # f32 (..., N, K)
+
+
+def fused_packed_linear(x, pk: dict, rt: "Runtime", cb, s_x=None):
+    """quant_mode='packed' linear through the fused single-launch Pallas
+    kernel (kernels/bcq_linear.py via ops.w4a4_linear_fused): activations
+    encode on the fly in VMEM; the packed weight buffers stream 4.5-bit.
+    x: (..., K); pk: pack_weight dict (N, K).  Returns f32-accurate (..., N)
+    in x.dtype."""
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.w4a4_linear_fused(
+        x, kernel_ops.packed_operand(pk), cb, rt.bcq_cfg, s_x=s_x
+    )
 
 
 def pack_weight(w: jax.Array, cfg: BCQConfig, cb: jax.Array) -> dict:
@@ -173,7 +196,19 @@ def packed_weight_shapes(d_in: int, d_out: int, cfg: BCQConfig) -> dict:
 def qdense_shared(x, ps: list, rt: Runtime, cb):
     """Several linear heads over the SAME input (QKV, MLP wi/wg): quantize
     the activation ONCE and reuse — bit-identical to per-head quantization
-    (same xq), but 1× instead of N× encode cost/traffic."""
+    (same xq), but 1× instead of N× encode cost/traffic.
+
+    The fused packed path skips the shared pre-quantization: each fused
+    kernel encodes the raw tile in VMEM (per-head encode is bit-identical
+    anyway — same x, same dynamic s_X — and never round-trips HBM).  The
+    fused kernel implements the paper's BCQ activation quantizer only, so
+    other act_formats ('none' = W4A16, mx4/…) keep the pre-quantized
+    decode+einsum path."""
+    if (
+        rt.quant_mode == "packed" and rt.fused_linear
+        and rt.act_format == "bcq" and cb is not None
+    ):
+        return [qdense(x, p, rt, cb) for p in ps]
     if rt.quant_mode in ("fake", "fake_full", "packed") and cb is not None:
         xq = _quantize_act(x.astype(jnp.float32), rt, cb)
         rt = dataclasses.replace(rt, act_format="_pre_quantized")
@@ -209,9 +244,12 @@ def qdense(x, p, rt: Runtime, cb: Optional[jax.Array]):
         wq = _fq(wt, cb, rt.bcq_cfg)
         y = jnp.einsum("...k,nk->...n", xq.astype(dt), wq.astype(dt))
     elif rt.quant_mode == "packed":
-        xq = _fq(x.astype(jnp.float32), cb, rt.bcq_cfg).astype(dt)
-        w = decode_packed_weight(p["kernel_packed"], rt.bcq_cfg, cb).astype(dt)
-        y = jnp.einsum("...k,nk->...n", xq, w)
+        if rt.fused_linear:
+            y = fused_packed_linear(x, p["kernel_packed"], rt, cb).astype(dt)
+        else:
+            xq = _fq(x.astype(jnp.float32), cb, rt.bcq_cfg).astype(dt)
+            w = decode_packed_weight(p["kernel_packed"], rt.bcq_cfg, cb).astype(dt)
+            y = jnp.einsum("...k,nk->...n", xq, w)
     else:
         raise ValueError(rt.quant_mode)
     if "bias" in p:
