@@ -1,4 +1,5 @@
-"""Paged vs contiguous serving: tokens/s and cache-HBM-bytes per decode step.
+"""Paged vs contiguous serving: tokens/s, cache-HBM-bytes per decode step,
+and chunked-prefill prefix-hit compute savings.
 
 The contiguous engine dequantizes the ENTIRE max-length KV cache of every
 slot on every decode tick; the paged engine gathers only the pages each
@@ -11,13 +12,32 @@ caching engages) across all three cache kinds and reports:
 * analytic cache-HBM-bytes read per decode step (exact from shapes: the
   contiguous path reads B·max_len token-slots; the paged path reads
   ceil(len/ps)·ps live token-slots per sequence),
-* pool pages held vs contiguous slot footprint (prefix sharing included).
+* pool pages held vs contiguous slot footprint (prefix sharing included),
+
+and, for the chunked-prefill engine (PagedEngine(chunked_prefill=True)):
+
+* token-for-token match with the full-prefill paged engine,
+* a WARM pass re-submitting the same prompts against the now-populated
+  prefix cache: prefill query tokens actually run (the uncached suffix
+  only — on a full-page prefix hit the engine performs ZERO attention
+  FLOPs over the cached pages, verified here as `warm_prefill_tokens`
+  == the sum of prompt tails), and the prefill-token reduction
+  cold/warm (the deterministic compute-saving ratio; wall-clock on CPU
+  is dominated by jit compilation of the cold pass, so it is reported
+  but not headline),
+* analytic prefill compute/bytes saved by the hits: GEMM FLOPs
+  (2·weights·tokens_skipped), attention FLOPs (4·H·D·Σ context per
+  skipped query), and the KV-page HBM bytes neither recomputed nor
+  rewritten.
+
+Everything lands in ``BENCH_paged.json`` (CI artifact).
 
   PYTHONPATH=src python benchmarks/paged_bench.py --gen 12 --page-size 8
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -50,6 +70,32 @@ def token_slot_bytes(kind: str, n_kv: int, d_head: int, cfg: BCQConfig) -> float
     else:
         raise ValueError(kind)
     return 2 * n_kv * per_head  # k + v
+
+
+def gemm_weights_per_token(cfg) -> int:
+    """GEMM weight scalars a prefill query token multiplies through (all
+    layers): qkv + wo + mlp.  2 FLOPs per weight per token."""
+    d, hd = cfg.d_model, cfg.head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    mlp = 2 * d * cfg.d_ff + (d * cfg.d_ff if cfg.act == "swiglu" else 0)
+    return cfg.n_layers * (attn + mlp)
+
+
+def prefill_savings(cfg, skipped_per_req: list[int], kind: str, bcq_cfg) -> dict:
+    """Analytic prefill compute/bytes the prefix hits avoided."""
+    gemm_flops = 2 * gemm_weights_per_token(cfg) * sum(skipped_per_req)
+    # skipped query at absolute position p attends to p+1 keys: QK^T + PV
+    attn_flops = sum(
+        4 * cfg.n_heads * cfg.head_dim * cfg.n_layers * (p + 1)
+        for n in skipped_per_req for p in range(n)
+    )
+    tsb = token_slot_bytes(kind, cfg.n_kv_heads, cfg.head_dim, bcq_cfg)
+    hbm_bytes = sum(skipped_per_req) * tsb * cfg.n_layers
+    return {
+        "prefill_gemm_flops_saved": gemm_flops,
+        "prefill_attn_flops_saved": attn_flops,
+        "prefill_hbm_bytes_saved": hbm_bytes,
+    }
 
 
 def requests_for(cfg, gen: int, rng) -> list[Request]:
@@ -98,25 +144,155 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     out_p = {r.rid: r.out for r in fin_p}
     match = all(out_c[rid] == out_p[rid] for rid in out_c)
 
-    # ---- analytic cache-HBM-bytes read by ONE decode step (all slots) ----
+    # ---- chunked prefill: COLD pass (empty prefix cache), then WARM pass
+    # re-submitting the same prompts against the kept engine — prefix hits
+    # now skip whole pages of prefill compute, not just page memory.
+    rng = np.random.default_rng(0)
+    eng_ck = PagedEngine(
+        api, params, n_slots=args.slots, max_len=max_len, page_size=ps,
+        chunked_prefill=True, prefill_chunk=args.prefill_chunk or 2 * ps,
+    )
+    reqs_ck = requests_for(cfg, args.gen, rng)
+    t0 = time.perf_counter()
+    for r in reqs_ck:
+        eng_ck.submit(r)
+    fin_ck, ticks_ck = eng_ck.run_to_completion()
+    t_chunked = time.perf_counter() - t0
+    out_ck = {r.rid: r.out for r in fin_ck}
+    match_ck = all(out_p[rid] == out_ck[rid] for rid in out_p)
+    cold_prefill_tokens = eng_ck.stats["prefill_tokens"]
+
+    rng = np.random.default_rng(0)
+    warm_reqs = requests_for(cfg, args.gen, rng)
+    t0 = time.perf_counter()
+    for r in warm_reqs:
+        eng_ck.submit(Request(rid=100 + r.rid, prompt=r.prompt, max_new=r.max_new))
+    fin_w, _ = eng_ck.run_to_completion()
+    t_warm = time.perf_counter() - t0
+    warm_prefill_tokens = eng_ck.stats["prefill_tokens"] - cold_prefill_tokens
+    # every full page of every prompt is now cached → the warm pass runs
+    # prefill (and its attention) over ONLY the uncached tails: zero
+    # attention FLOPs issue over the prefix-hit pages
+    expected_warm = sum(
+        len(r.prompt) - (len(r.prompt) - 1) // ps * ps for r in warm_reqs
+    )
+    skipped_per_req = [(len(r.prompt) - 1) // ps * ps for r in warm_reqs]
+
     tsb = token_slot_bytes(kind, cfg.n_kv_heads, cfg.head_dim, bcq_cfg)
     mean_live = np.mean([len(r.prompt) + r.max_new // 2 for r in reqs])
     contig_bytes = args.slots * max_len * tsb * cfg.n_layers
     paged_bytes = args.slots * (np.ceil(mean_live / ps) * ps) * tsb * cfg.n_layers
     toks = sum(len(r.out) for r in fin_p)
-    return {
+    row = {
         "kind": kind,
         "match": match,
+        "match_chunked": match_ck,
         "tok_s_contig": toks / t_contig,
         "tok_s_paged": toks / t_paged,
+        "tok_s_chunked": toks / t_chunked,
         "ticks_contig": ticks_c,
         "ticks_paged": ticks_p,
+        "ticks_chunked": ticks_ck,
         "contig_bytes": contig_bytes,
         "paged_bytes": paged_bytes,
         "prefix_hits": eng.stats["prefix_hits"],
         "peak_pages": eng.stats["peak_pages"],
         "contig_slots_pages": args.slots * (max_len // ps),
+        "cold_prefill_tokens": cold_prefill_tokens,
+        "warm_prefill_tokens": warm_prefill_tokens,
+        "warm_prefill_tokens_expected": expected_warm,
+        "warm_prefill_tokens_skipped": sum(skipped_per_req),
+        # deterministic compute-saving ratio (prefill query tokens run);
+        # wall-clock warm/cold on CPU mostly measures jit compilation
+        "prefill_token_reduction": cold_prefill_tokens / max(warm_prefill_tokens, 1),
+        "t_warm_wallclock_s": t_warm,
+        "t_cold_wallclock_s": t_chunked,
     }
+    row.update(prefill_savings(cfg, skipped_per_req, kind, bcq_cfg))
+    return row
+
+
+def bench(args) -> bool:
+    assert args.max_len % args.page_size == 0
+
+    cfg = get_smoke("gpt3_126m")
+    cb = default_universal_codebooks(BCQConfig()).as_jnp()
+    print(
+        f"arch={cfg.name}  slots={args.slots} max_len={args.max_len} "
+        f"page={args.page_size} gen={args.gen} "
+        f"prefill_chunk={args.prefill_chunk or 2 * args.page_size}\n"
+    )
+    hdr = (
+        f"{'cache':6s} {'match':5s} {'tok/s ctg':>10s} {'tok/s pgd':>10s} "
+        f"{'tok/s ck':>9s} {'ticks':>14s} {'HBM B/step ctg':>15s} "
+        f"{'HBM B/step pgd':>15s} {'saving':>7s} {'pages':>9s} "
+        f"{'prefill warm/cold':>18s} {'hit ÷tokens':>12s}"
+    )
+    print(hdr)
+    ok = True
+    rows = []
+    for kind in ("bf16", "int8", "bcq4"):
+        r = run_kind(cfg, kind, cb, args)
+        rows.append(r)
+        saving = 1.0 - r["paged_bytes"] / r["contig_bytes"]
+        zero_flops_over_hits = (
+            r["warm_prefill_tokens"] == r["warm_prefill_tokens_expected"]
+        )
+        ok &= (
+            r["match"] and r["match_chunked"]
+            and r["paged_bytes"] < r["contig_bytes"]
+            and zero_flops_over_hits
+        )
+        print(
+            f"{r['kind']:6s} {str(r['match'] and r['match_chunked']):5s} "
+            f"{r['tok_s_contig']:10.1f} {r['tok_s_paged']:10.1f} "
+            f"{r['tok_s_chunked']:9.1f} "
+            f"{r['ticks_contig']:4d}/{r['ticks_paged']:<4d}/{r['ticks_chunked']:<4d} "
+            f"{r['contig_bytes']:15,.0f} {r['paged_bytes']:15,.0f} {saving:6.1%} "
+            f"{r['peak_pages']:3d}/{r['contig_slots_pages']:<3d} "
+            f"{r['warm_prefill_tokens']:8d}/{r['cold_prefill_tokens']:<8d} "
+            f"{r['prefill_token_reduction']:11.2f}x"
+        )
+        print(
+            f"{'':6s} prefix-hit savings (warm pass, analytic): "
+            f"GEMM {r['prefill_gemm_flops_saved']/1e6:,.1f} MFLOPs, "
+            f"attn {r['prefill_attn_flops_saved']/1e6:,.2f} MFLOPs, "
+            f"KV-write HBM {r['prefill_hbm_bytes_saved']:,.0f} B "
+            f"({'zero attn FLOPs over cached pages' if zero_flops_over_hits else 'UNEXPECTED prefill tokens'})"
+        )
+    report = {
+        "config": {
+            "arch": cfg.name, "slots": args.slots, "max_len": args.max_len,
+            "page_size": args.page_size, "gen": args.gen,
+            "prefill_chunk": args.prefill_chunk or 2 * args.page_size,
+        },
+        "rows": rows,
+    }
+    with open("BENCH_paged.json", "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(
+        "\npaged path reads only live pages per decode step "
+        "(contiguous dequantizes the full max-length cache of every slot); "
+        "prefix caching shares full prompt pages across requests, and "
+        "chunked prefill additionally skips ALL prefill compute over "
+        "prefix-hit pages (the warm pass runs only the uncached tails).  "
+        "Wrote BENCH_paged.json."
+    )
+    return ok
+
+
+def run(fast: bool = False):
+    """benchmarks.run entry: paged + chunked-prefill serving smoke."""
+    args = argparse.Namespace(gen=6 if fast else 12, slots=2 if fast else 3,
+                              max_len=64, page_size=8, prefill_chunk=16)
+    t0 = time.perf_counter()
+    ok = bench(args)
+    us = (time.perf_counter() - t0) * 1e6
+    from benchmarks.common import emit
+
+    emit("paged_bench", us, "ok" if ok else "MISMATCH")
+    if not ok:
+        raise SystemExit("paged path failed equivalence or byte-saving check")
 
 
 def main():
@@ -125,38 +301,10 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill chunk size (page multiple; 0 = 2 pages)")
     args = ap.parse_args()
-    assert args.max_len % args.page_size == 0
-
-    cfg = get_smoke("gpt3_126m")
-    cb = default_universal_codebooks(BCQConfig()).as_jnp()
-    print(
-        f"arch={cfg.name}  slots={args.slots} max_len={args.max_len} "
-        f"page={args.page_size} gen={args.gen}\n"
-    )
-    hdr = (
-        f"{'cache':6s} {'match':5s} {'tok/s ctg':>10s} {'tok/s pgd':>10s} "
-        f"{'ticks':>11s} {'HBM B/step ctg':>15s} {'HBM B/step pgd':>15s} "
-        f"{'saving':>7s} {'pages':>11s}"
-    )
-    print(hdr)
-    ok = True
-    for kind in ("bf16", "int8", "bcq4"):
-        r = run_kind(cfg, kind, cb, args)
-        saving = 1.0 - r["paged_bytes"] / r["contig_bytes"]
-        ok &= r["match"] and r["paged_bytes"] < r["contig_bytes"]
-        print(
-            f"{r['kind']:6s} {str(r['match']):5s} {r['tok_s_contig']:10.1f} "
-            f"{r['tok_s_paged']:10.1f} {r['ticks_contig']:5d}/{r['ticks_paged']:<5d} "
-            f"{r['contig_bytes']:15,.0f} {r['paged_bytes']:15,.0f} {saving:6.1%} "
-            f"{r['peak_pages']:4d}/{r['contig_slots_pages']:<4d}"
-        )
-    print(
-        "\npaged path reads only live pages per decode step "
-        "(contiguous dequantizes the full max-length cache of every slot); "
-        "prefix caching shares full prompt pages across requests."
-    )
-    if not ok:
+    if not bench(args):
         raise SystemExit("paged path failed equivalence or byte-saving check")
 
 

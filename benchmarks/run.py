@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import (
         fig4_convergence,
         kernel_bench,
+        paged_bench,
         roofline_report,
         table1_bitwidth,
         table2_ppl,
@@ -35,6 +36,7 @@ def main() -> None:
         "table9": table9_universal,
         "table10": table10_codeword,
         "kernels": kernel_bench,
+        "paged": paged_bench,
         "table2": table2_ppl,
         "roofline": roofline_report,
     }

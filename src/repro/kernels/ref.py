@@ -168,3 +168,49 @@ def paged_attention_ref(
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bht,bthd->bhd", p, vg)
+
+
+def chunked_prefill_ref(
+    q: jax.Array,
+    pool: dict,
+    block_tables: jax.Array,
+    n_past: jax.Array,
+    kind: str,
+    cfg: BCQConfig,
+    cb: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle for the Pallas chunked-prefill kernel: the query chunk's
+    exact masked softmax over the block-table-gathered, dequantized pages.
+
+    q (B, C, H, D) — query c sits at absolute position n_past[b] + c;
+    pool leaves (P, ps, Hkv, ...) with the chunk's own K/V already written
+    into its pages; block_tables (B, MAXP); n_past (B,) tokens in pages
+    before the chunk.  Page token t (absolute position t in the gathered
+    sequence) is visible iff t <= n_past[b] + c — prefix tokens see the
+    whole chunk, chunk tokens mask causally, unwritten tails are hidden.
+    Returns (B, C, H, D) f32."""
+    pool = dict(pool)
+    if cb is not None:
+        pool["_cb"] = cb
+    b, c, h, d = q.shape
+    kf = _dequant_pool_ref(pool, "k", kind, cfg)  # (P, ps, Hkv, D)
+    vf = _dequant_pool_ref(pool, "v", kind, cfg)
+    ps = kf.shape[1]
+    hkv = kf.shape[2]
+
+    def gather(x):
+        g = x[block_tables]  # (B, MAXP, ps, Hkv, D)
+        return g.reshape(b, -1, hkv, d)
+
+    kg, vg = gather(kf), gather(vf)
+    rep = h // hkv
+    if rep > 1:
+        kg = jnp.repeat(kg, rep, axis=2)
+        vg = jnp.repeat(vg, rep, axis=2)
+    s = jnp.einsum("bchd,bthd->bhct", q.astype(jnp.float32), kg) * (d**-0.5)
+    tpos = jnp.arange(kg.shape[1])
+    qpos = n_past[:, None] + jnp.arange(c)  # (B, C)
+    mask = tpos[None, None, None, :] <= qpos[:, None, :, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhct,bthd->bchd", p, vg)

@@ -447,6 +447,37 @@ def paged_token_write(pool, k_new, v_new, page_ids, offsets, kind, cfg: BCQConfi
     return out
 
 
+def paged_chunk_write(pool, k_new, v_new, chunk_page_ids, kind, cfg: BCQConfig, cb):
+    """Quantize a prefill chunk's K/V and scatter it into pool pages.
+
+    pool: single-layer page-pool tree, leaves (P, ps, H, ...);
+    k_new/v_new: (B, C, H, D) — the chunk's fresh keys/values;
+    chunk_page_ids: (B, n_cp) int32 destination pages, n_cp = ceil(C/ps).
+    The chunk starts at a page boundary (the engine aligns chunk size to
+    the page size, so only a prompt's LAST chunk is ragged) and its pages
+    are freshly allocated and private, so whole-page scatters are safe.
+    Quantization is per (token, head) vector — bit-identical to what a
+    full-prompt prefill writes for the same tokens, so chunked pages are
+    byte-for-byte the pages scatter_prefill_pages would have produced
+    (the tail beyond C holds cache_init zeros either way)."""
+    b = k_new.shape[0]
+    ps = pool_page_size(pool)
+    n_cp = chunk_page_ids.shape[1]
+    stage = cache_init(b, n_cp * ps, k_new.shape[2], k_new.shape[3], kind, cfg)
+    for n in ("k_sx", "v_sx"):
+        if n in pool:
+            stage[n] = pool[n]
+    enc = cache_write(stage, k_new, v_new, 0, kind, cfg, cb)
+    out = dict(pool)
+    for n, leaf in pool.items():
+        if getattr(leaf, "ndim", 0) < 2:
+            continue  # per-tensor scales are pool-global
+        src = enc[n]  # (B, n_cp·ps, ...)
+        pages = src.reshape((b, n_cp, ps) + src.shape[2:])
+        out[n] = leaf.at[chunk_page_ids].set(pages.astype(leaf.dtype))
+    return out
+
+
 def paged_gather_kv(pool, block_tables, kind, cfg: BCQConfig, cb, dtype):
     """Gather each sequence's pages via its block table and dequantize.
 
@@ -662,7 +693,13 @@ def attention(
     read dequantizes/attends over only that prefix (bucketed decode).
     ``paged``: (pool, block_tables, lengths) page-pool state; the new token
     is scattered into its page and attention gathers live pages only.
-    Returns (out, new_pool)."""
+    Returns (out, new_pool).
+    A 4-tuple ``paged`` = (pool, block_tables, n_past, chunk_page_ids) is
+    the CHUNKED-PREFILL path: x is a whole prompt chunk starting at
+    page-aligned position ``n_past``; its K/V are quantized and scattered
+    whole-page into ``chunk_page_ids``, and the chunk attends causally to
+    itself plus every earlier page through the block table — prefix-hit
+    pages are read (gather + dequant), never recomputed."""
     b, s, _ = x.shape
     hd = cfg.head_dim
     if kv_override is None:
@@ -676,6 +713,32 @@ def attention(
     else:
         q = qdense(x, p["wq"], rt, cb).reshape(b, s, cfg.n_heads, hd)
         k, v = kv_override
+
+    if paged is not None and len(paged) == 4:
+        pool, block_tables, n_past, chunk_page_ids = paged
+        new_pool = paged_chunk_write(
+            pool, k, v, chunk_page_ids, rt.cache_kind, rt.bcq_cfg, cb
+        )
+        if rt.paged_kernel and window is None:
+            from repro.kernels.chunked_prefill import chunked_prefill
+
+            out = chunked_prefill(
+                q, new_pool, block_tables, n_past, rt.cache_kind, rt.bcq_cfg, cb
+            ).astype(q.dtype)
+        else:
+            kf, vf = paged_gather_kv(
+                new_pool, block_tables, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype
+            )
+            # gathered index j IS absolute position j, so the standard
+            # causal mask (j <= position) gives prefix visibility, chunk
+            # causality, and tail masking in one condition — identical
+            # row-wise to what a full-prompt prefill computes.
+            out = _attend_chunked(
+                q, kf, vf, positions, (n_past + s).reshape(b, 1, 1, 1), causal,
+                window, rt.attn_chunk, rt.unroll, rt.attn_f32,
+            )
+        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+        return out, new_pool
 
     if paged is not None:
         pool, block_tables, lengths = paged

@@ -120,7 +120,9 @@ def backbone(params, x, cfg, rt: Runtime, positions, caches=None, cache_pos=None
              kv_bound=None, paged_tables=None):
     """Scan the layer stack.  caches: stacked (L, ...) pytree or None.
     ``paged_tables``: (block_tables, lengths) — treat ``caches`` as a page
-    pool (leaves (L, n_pages, page_size, ...)) instead of slot caches."""
+    pool (leaves (L, n_pages, page_size, ...)) instead of slot caches.
+    A 3-tuple (block_tables, n_past, chunk_page_ids) selects the
+    chunked-prefill path (see layers.attention)."""
     cb = _codebooks(params)
 
     def body(carry, xs):
@@ -218,4 +220,30 @@ def paged_decode_step(params, pool, tokens, block_tables, lengths, cfg: ArchConf
         params, x, cfg, rt, positions, pool, paged_tables=(block_tables, lengths)
     )
     logits = lm_logits(params, x, rt)
+    return logits, pool
+
+
+def prefill_from_pages(params, tokens, pool, block_tables, n_past, chunk_page_ids,
+                       cfg: ArchConfig, rt: Runtime):
+    """Chunked prefill: run ONE prompt chunk against a shared page pool.
+
+    tokens: (B, C) the uncached chunk of each prompt, starting at
+    page-aligned position ``n_past[b]`` (everything before it — prefix-hit
+    pages included — already lives in pages referenced by the block
+    table); block_tables: (B, MAXP) int32; n_past: (B,) int32;
+    chunk_page_ids: (B, ceil(C/ps)) freshly-allocated private pages that
+    receive this chunk's quantized K/V.  The chunk attends causally to
+    itself and, via the block table, to every earlier page — prefix-hit
+    pages are READ (gather + in-kernel dequant with Runtime.paged_kernel),
+    never recomputed, which is what makes a prefix hit save prefill
+    compute and not just page memory.  Returns (last-position logits,
+    pool) — the logits only matter on a prompt's final chunk."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, rt)
+    positions = n_past[:, None] + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, pool, _ = backbone(
+        params, x, cfg, rt, positions, pool,
+        paged_tables=(block_tables, n_past, chunk_page_ids),
+    )
+    logits = lm_logits(params, x[:, -1:, :], rt)
     return logits, pool

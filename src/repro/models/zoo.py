@@ -51,6 +51,8 @@ class ModelAPI:
     # paged-serving entry points (attention-cache families only)
     paged_decode_fn: Callable[..., Any] = None
     pool_init: Callable[..., Any] = None
+    # chunked prefill against gathered pages (PagedEngine chunked admission)
+    prefill_from_pages_fn: Callable[..., Any] = None
 
 
 def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
@@ -69,6 +71,9 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
                 p, pool, t, bt, ln, cfg, rt
             ),
             pool_init=lambda n_pages, ps: transformer.cache_init_stacked(cfg, rt, n_pages, ps),
+            prefill_from_pages_fn=lambda p, t, pool, bt, n_past, ids: (
+                transformer.prefill_from_pages(p, t, pool, bt, n_past, ids, cfg, rt)
+            ),
         )
     if fam == "ssm":
         return ModelAPI(

@@ -8,9 +8,21 @@
                admission control and preemption-by-eviction
 - generate.py — shared greedy-decode helpers (all serving paths)
 """
-from repro.serving.engine import PagedEngine
+from repro.serving.engine import (
+    PagedEngine,
+    PagePoolExhaustedError,
+    PromptTooLongError,
+)
 from repro.serving.generate import greedy_generate
 from repro.serving.pages import NULL_PAGE, PagePool
 from repro.serving.prefix import PrefixCache
 
-__all__ = ["PagedEngine", "greedy_generate", "PagePool", "PrefixCache", "NULL_PAGE"]
+__all__ = [
+    "PagedEngine",
+    "PagePoolExhaustedError",
+    "PromptTooLongError",
+    "greedy_generate",
+    "PagePool",
+    "PrefixCache",
+    "NULL_PAGE",
+]

@@ -17,11 +17,35 @@ with a global page pool + per-sequence block tables:
   and is requeued in recompute mode (prompt := prompt + generated), which
   is greedy-exact.
 
+**Chunked-prefill tick model** (``chunked_prefill=True``): admission no
+longer runs a full-prompt prefill over a max_len slab.  Instead it only
+*plans* — claims the longest chain of prefix-hit pages and marks the slot
+``prefill`` — and every ``step()`` then advances each prefilling slot by
+ONE ``prefill_chunk``-token chunk (``models.transformer.prefill_from_pages``:
+the chunk attends causally to itself and, through its block table, to the
+already-written pages; with Runtime.paged_kernel the gather + dequant runs
+in the Pallas chunked-prefill kernel) before the fused decode tick serves
+the decoding slots.  Prefill compute is therefore spread across ticks and
+interleaved with decode (mixed prefill/decode scheduling), new pages are
+written as each chunk completes, and a prefix hit saves *compute*, not
+just page memory: the engine runs zero transformer work — zero attention
+FLOPs — over prefix-hit tokens (only the uncached suffix runs; on a 100%
+hit that is just the prompt's final partial page, kept so the last
+position's logits exist).  Chunked mode also lifts the contiguous-slab
+prompt-length limit: block tables grow on demand (in whole pages, one
+decode retrace per growth), so a prompt longer than ``max_len`` serves
+fine as long as the pool has pages — ``PromptTooLongError`` can only come
+out of the non-chunked path, whose prefill materializes a max_len slab.
+
 Greedy outputs are token-for-token identical to the contiguous engine:
 the pool reuses cache_write's quantization layouts page by page, gathered
 decode attention sees the same dequantized values with the same shapes
 (max_len == MAXP·page_size), and masked tail positions contribute exact
-zeros either way.  Verified in tests/test_paged_engine.py.
+zeros either way.  Chunked prefill writes byte-identical pages (per-token
+quantization) and computes the same masked attention rows as the
+full-prompt prefill, so its greedy tokens match the non-chunked engine
+for every cache kind and prefix-hit fraction.  Verified in
+tests/test_paged_engine.py and tests/test_chunked_prefill.py.
 """
 from __future__ import annotations
 
@@ -39,11 +63,27 @@ from repro.serving.pages import NULL_PAGE, PagePool, pages_needed
 from repro.serving.prefix import PrefixCache, chunk_hashes
 
 
+class PromptTooLongError(ValueError):
+    """Prompt cannot fit the non-chunked prefill slab (plen >= max_len).
+
+    Only the non-chunked admission path raises this: full-prompt prefill
+    materializes a max_len cache slab.  Chunked admission has no such
+    limit — its block tables grow page-by-page with the prompt."""
+
+
+class PagePoolExhaustedError(RuntimeError):
+    """The page pool cannot serve the pending request even with every
+    reclaimable prefix page evicted and every other sequence preempted."""
+
+
 @dataclasses.dataclass
 class _PagedSlot:
     req: Optional[Request] = None
     pos: int = 0  # tokens currently in cache (next write position)
     admit_seq: int = 0  # admission order — preemption victims are youngest-first
+    mode: str = "decode"  # 'decode' | 'prefill' (chunked admission in flight)
+    pending: Optional[np.ndarray] = None  # full prompt while mode == 'prefill'
+    hashes: Optional[list] = None  # full-page chain hashes of ``pending``
 
 
 class PagedEngine:
@@ -60,6 +100,8 @@ class PagedEngine:
         eos_id: int = -1,
         prefix_caching: bool = True,
         watermark: Optional[int] = None,
+        chunked_prefill: bool = False,
+        prefill_chunk: int = 16,
     ):
         assert api.paged_decode_fn is not None, "family has no paged serving path"
         assert max_len % page_size == 0, "page_size must divide max_len"
@@ -71,6 +113,16 @@ class PagedEngine:
         self.maxp = max_len // page_size
         self.eos = eos_id
         self.prefix_caching = prefix_caching
+        self.chunked = chunked_prefill
+        self.prefill_chunk = prefill_chunk
+        if chunked_prefill:
+            assert api.prefill_from_pages_fn is not None, (
+                "family has no chunked-prefill path"
+            )
+            assert prefill_chunk % page_size == 0, (
+                "prefill_chunk must be a page multiple (only a prompt's last "
+                "chunk may end mid-page)"
+            )
         # watermark: decode headroom kept free at admission — every active
         # slot may need one fresh page on any upcoming tick
         self.watermark = n_slots if watermark is None else watermark
@@ -81,7 +133,7 @@ class PagedEngine:
         self.pool = api.pool_init(n_pages, page_size)
 
         self.slots = [_PagedSlot() for _ in range(n_slots)]
-        self.tables = np.zeros((n_slots, self.maxp), np.int32)  # NULL_PAGE padded
+        self.tables = np.full((n_slots, self.maxp), NULL_PAGE, np.int32)
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self._next_tok = np.zeros((n_slots,), np.int32)
@@ -92,9 +144,15 @@ class PagedEngine:
         self._scatter = jax.jit(pages_lib.scatter_prefill_pages)
         self._decode = jax.jit(api.paged_decode_fn)
         self._copy_page = jax.jit(pages_lib.copy_page)
+        if chunked_prefill:
+            # retraces per (chunk_len, chunk_pages, table_width) triple —
+            # page-aligned chunks keep that to one shape per prompt tail
+            self._chunk_step = jax.jit(api.prefill_from_pages_fn)
         self.stats = {
             "prefix_hits": 0, "prefix_misses": 0, "preemptions": 0,
             "prefix_evictions": 0, "peak_pages": 0, "decode_ticks": 0,
+            "prefill_chunks": 0, "prefill_tokens": 0,
+            "prefill_tokens_skipped": 0,
         }
 
     # ------------------------------------------------------------ intake
@@ -133,17 +191,28 @@ class PagedEngine:
     def _available_pages(self) -> int:
         return self.pool_mgr.available() + self.prefix.reclaimable_count()
 
-    # -------------------------------------------------------- admission
-    def _try_admit(self, req: Request, slot_idx: int) -> bool:
-        prompt = np.asarray(req.prompt, np.int64)
-        plen = len(prompt)
-        assert plen < self.max_len, "prompt does not fit the cache"
-        n_prompt_pages = pages_needed(plen, self.ps)
-        n_full = plen // self.ps
+    def _grow_tables(self, n_seq_pages: int):
+        """Widen every block table to ≥ n_seq_pages columns (chunked mode
+        only — lifts the plen < max_len slab limit; decode retraces once
+        per growth)."""
+        if n_seq_pages <= self.tables.shape[1]:
+            return
+        pad = n_seq_pages - self.tables.shape[1]
+        self.tables = np.pad(
+            self.tables, ((0, 0), (0, pad)), constant_values=NULL_PAGE
+        )
 
-        # plan: longest chain of full-page prefix hits (non-mutating peek —
-        # a refused admission must not unpark reclaimable pages or touch
-        # stats, since the head-of-line request is re-scanned every tick)
+    def _seq_capacity(self) -> int:
+        """Tokens a sequence may hold: the block-table width (chunked mode
+        grows it), == max_len for a non-chunked engine."""
+        return self.tables.shape[1] * self.ps
+
+    # -------------------------------------------------------- admission
+    def _plan_prefix_hits(self, prompt: np.ndarray) -> tuple[list, list[int]]:
+        """Longest chain of full-page prefix hits (non-mutating peek —
+        a refused admission must not unpark reclaimable pages, reorder the
+        prefix LRU, or touch stats, since the head-of-line request is
+        re-scanned every tick)."""
         hashes = chunk_hashes(prompt, self.ps) if self.prefix_caching else []
         hits: list[int] = []
         for h in hashes:
@@ -151,16 +220,12 @@ class PagedEngine:
             if pid is None:
                 break
             hits.append(pid)
+        return hashes, hits
 
-        need = n_prompt_pages - len(hits)
-        if self._available_pages() < need + self.watermark:
-            return False  # admission control: keep decode headroom
-
-        # commit: claim the hit pages (revive reclaimable ones), count stats
+    def _claim_hits(self, hashes, hits, n_prompt_pages: int, table: np.ndarray):
+        """Commit to the planned hit pages: revive/ref them, count stats."""
         self.stats["prefix_hits"] += len(hits)
         self.stats["prefix_misses"] += n_prompt_pages - len(hits)
-        table = np.full((self.maxp,), NULL_PAGE, np.int32)
-        scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
         for i, (h, pid) in enumerate(zip(hashes, hits)):
             claimed = self.prefix.lookup(h)  # unparks the reclaimable page
             assert claimed == pid
@@ -169,9 +234,36 @@ class PagedEngine:
             else:
                 self.pool_mgr.ref(pid)
             table[i] = pid
+
+    def _try_admit(self, req: Request, slot_idx: int) -> bool:
+        prompt = np.asarray(req.prompt, np.int64)
+        plen = len(prompt)
+        if self.chunked:
+            return self._try_admit_chunked(req, prompt, plen, slot_idx)
+        if plen >= self.max_len:
+            raise PromptTooLongError(
+                f"prompt of {plen} tokens does not fit the non-chunked "
+                f"prefill slab (max_len={self.max_len}); serve it with "
+                f"chunked_prefill=True"
+            )
+        n_prompt_pages = pages_needed(plen, self.ps)
+        n_full = plen // self.ps
+
+        hashes, hits = self._plan_prefix_hits(prompt)
+        need = n_prompt_pages - len(hits)
+        if self._available_pages() < need + self.watermark:
+            return False  # admission control: keep decode headroom
+
+        table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
+        scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
+        self._claim_hits(hashes, hits, n_prompt_pages, table)
         for i in range(len(hits), n_prompt_pages):
             pid = self._alloc_page()
-            assert pid is not None  # guaranteed by the admission check
+            if pid is None:
+                raise PagePoolExhaustedError(
+                    f"allocator dry mid-admission (watermark={self.watermark} "
+                    f"should have reserved {need} pages)"
+                )
             table[i] = pid
             scatter_ids[i] = pid
 
@@ -184,6 +276,7 @@ class PagedEngine:
         if self.prefix_caching:
             for i in range(len(hits), n_full):
                 self.prefix.register(hashes[i], int(table[i]))
+        self.stats["prefill_tokens"] += plen
 
         first = int(next_greedy_tokens(logits)[0])
         req.out.append(first)
@@ -191,7 +284,50 @@ class PagedEngine:
         self.slots[slot_idx] = _PagedSlot(req=req, pos=plen, admit_seq=self._admit_counter)
         self._admit_counter += 1
         self._next_tok[slot_idx] = first
+        self._finish_if_budget_spent(slot_idx)
         return True
+
+    def _try_admit_chunked(self, req: Request, prompt, plen: int, slot_idx: int) -> bool:
+        """Plan-only admission: claim prefix-hit pages, mark the slot
+        ``prefill``; ``_prefill_tick`` then runs one chunk per step()."""
+        n_prompt_pages = pages_needed(plen, self.ps)
+        hashes, hits = self._plan_prefix_hits(prompt)
+        # keep ≥ 1 suffix token so the prompt's last-position logits (the
+        # first generated token) come out of the final chunk
+        hits = hits[: min(len(hits), (plen - 1) // self.ps)]
+        need = n_prompt_pages - len(hits)
+        if self._available_pages() < need + self.watermark:
+            return False  # same memory policy; only compute is deferred
+
+        self._grow_tables(pages_needed(plen + req.max_new + 1, self.ps))
+        table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
+        self._claim_hits(hashes, hits, n_prompt_pages, table)
+        self.stats["prefill_tokens_skipped"] += len(hits) * self.ps
+
+        self.tables[slot_idx] = table
+        self.slots[slot_idx] = _PagedSlot(
+            req=req, pos=len(hits) * self.ps, admit_seq=self._admit_counter,
+            mode="prefill", pending=prompt, hashes=hashes,
+        )
+        self._admit_counter += 1
+        return True
+
+    def _finish_if_budget_spent(self, i: int) -> bool:
+        """Retire a slot whose prefill's first token already exhausted the
+        generation budget (a preemption-resumed request whose
+        pre-preemption output had reached max_new) — without this,
+        re-admission would emit one token beyond the greedy-exact
+        reference.  Deliberately does NOT check EOS here: the contiguous
+        engine decodes past a first-token EOS too, and engine-vs-engine
+        token equivalence is the contract."""
+        slot = self.slots[i]
+        req = slot.req
+        if len(req.out) >= req.max_new + 1:
+            req.done = True
+            self.finished.append(req)
+            self._free_slot(i)
+            return True
+        return False
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
@@ -215,7 +351,10 @@ class PagedEngine:
         req = slot.req
         # recompute mode: prompt grows by everything generated so far; the
         # requeued prefill then reproduces the exact greedy continuation
-        # (req.out is shared, so tokens keep accumulating on the same list)
+        # (req.out is shared, so tokens keep accumulating on the same list).
+        # A preempted PREFILLING slot requeues its whole prompt — but its
+        # already-written full pages stay registered (reclaimable), so the
+        # retry's prefix hits resume roughly where the chunks left off.
         resumed = Request(
             rid=req.rid,
             prompt=np.concatenate([np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)]),
@@ -227,57 +366,125 @@ class PagedEngine:
         self.stats["preemptions"] += 1
         return victim
 
+    def _alloc_page_preempting(self, i: int) -> Optional[int]:
+        """_alloc_page with preemption fallback (youngest ≠ i first).
+        Returns None iff slot i itself got preempted or nothing is left."""
+        pid = self._alloc_page()
+        while pid is None:
+            if self._preempt_one(exclude=i) is None:
+                return None
+            if self.slots[i].req is None:
+                return None  # we preempted ourselves
+            pid = self._alloc_page()
+        return pid
+
     def _ensure_tail_page(self, i: int) -> bool:
         """Make sure slot i's next write position has a private page."""
         slot = self.slots[i]
         pi = slot.pos // self.ps
         pid = int(self.tables[i][pi])
         if slot.pos % self.ps == 0 and pid == NULL_PAGE:
-            pid = self._alloc_page()
-            while pid is None:
-                if self._preempt_one(exclude=i) is None:
-                    return False
-                if self.slots[i].req is None:
-                    return False  # we preempted ourselves
-                pid = self._alloc_page()
+            pid = self._alloc_page_preempting(i)
+            if pid is None:
+                return False
             self.tables[i][pi] = pid
             return True
         if pid != NULL_PAGE and self.pool_mgr.refcount[pid] > 1:
             # copy-on-write: tail page is shared (forked sequence) — give
             # this sequence a private copy before the token write
-            new = self._alloc_page()
-            while new is None:
-                if self._preempt_one(exclude=i) is None:
-                    return False
-                if self.slots[i].req is None:
-                    return False
-                new = self._alloc_page()
+            new = self._alloc_page_preempting(i)
+            if new is None:
+                return False
             self.pool = self._copy_page(self.pool, pid, new)
             self._drop_page(pid)  # source may have hit refcount 0 meanwhile
             self.tables[i][pi] = new
         return True
 
+    # ------------------------------------------------------ chunked prefill
+    def _prefill_tick(self, i: int) -> int:
+        """Advance prefilling slot i by ONE chunk.  Allocates the chunk's
+        pages (preempting if dry), runs prefill_from_pages over the chunk,
+        registers freshly completed full pages, and flips the slot to
+        decode mode after the prompt's last chunk.  Returns 1 if a chunk
+        ran (0 if the slot was preempted while allocating)."""
+        slot = self.slots[i]
+        prompt = slot.pending
+        plen = len(prompt)
+        start = slot.pos  # page-aligned: chunks are page multiples
+        c = min(self.prefill_chunk, plen - start)
+        first_page = start // self.ps
+        n_cp = pages_needed(c, self.ps)
+        ids = np.zeros((n_cp,), np.int32)
+        for k in range(n_cp):
+            pid = self._alloc_page_preempting(i)
+            if pid is None:
+                return 0  # slot preempted (requeued) or pool truly dry
+            self.tables[i][first_page + k] = pid
+            ids[k] = pid
+
+        tokens = jnp.asarray(prompt[start : start + c], jnp.int32)[None, :]
+        logits, self.pool = self._chunk_step(
+            self.params, tokens, self.pool,
+            pages_lib.as_block_table_array(self.tables[i : i + 1]),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(ids[None, :], jnp.int32),
+        )
+        slot.pos = start + c
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += c
+        if self.prefix_caching:
+            for p in range(first_page, min(slot.pos // self.ps, len(slot.hashes))):
+                self.prefix.register(slot.hashes[p], int(self.tables[i][p]))
+
+        if slot.pos == plen:  # prompt done — first token, start decoding
+            first = int(next_greedy_tokens(logits)[0])
+            slot.req.out.append(first)
+            slot.mode = "decode"
+            slot.pending = None
+            slot.hashes = None
+            self._next_tok[i] = first
+            self._finish_if_budget_spent(i)
+        return 1
+
     # ------------------------------------------------------------- ticks
     def _active(self):
         return [i for i, s in enumerate(self.slots) if s.req is not None]
 
+    def _decoding(self):
+        return [i for i, s in enumerate(self.slots) if s.req is not None and s.mode == "decode"]
+
     def step(self) -> int:
-        """Admit + ONE fused decode tick for all active slots (any mix of
-        positions).  Returns the number of active slots served."""
+        """Admit + one chunk for every prefilling slot + ONE fused decode
+        tick for all decoding slots (any mix of positions) — chunked
+        prefill interleaves with decode instead of blocking admission.
+        Returns the number of slots served (chunks + decoded)."""
         self._admit()
-        active = [i for i in self._active() if self._ensure_tail_page(i)]
-        active = [i for i in active if self.slots[i].req is not None]
+        served = 0
+        for i in list(range(self.n_slots)):
+            if self.slots[i].req is not None and self.slots[i].mode == "prefill":
+                served += self._prefill_tick(i)
+
+        active = [i for i in self._decoding() if self._ensure_tail_page(i)]
+        active = [i for i in active if self.slots[i].req is not None and self.slots[i].mode == "decode"]
         if not active:
-            return 0
+            return served
 
         lengths = np.zeros((self.n_slots,), np.int32)
         for i in active:
             lengths[i] = self.slots[i].pos
+        bt = self.tables
+        if len(active) != self.n_slots:
+            # mask non-decoding rows (prefilling slots keep live pages in
+            # self.tables) so idle-slot scatters land in the null page
+            bt = self.tables.copy()
+            for i in range(self.n_slots):
+                if i not in active:
+                    bt[i] = NULL_PAGE
         logits, self.pool = self._decode(
             self.params,
             self.pool,
             jnp.asarray(self._next_tok[:, None], jnp.int32),
-            pages_lib.as_block_table_array(self.tables),
+            pages_lib.as_block_table_array(bt),
             jnp.asarray(lengths, jnp.int32),
         )
         self.stats["decode_ticks"] += 1
@@ -288,14 +495,15 @@ class PagedEngine:
             slot.req.out.append(tok)
             slot.pos += 1
             if sequence_finished(
-                tok, len(slot.req.out), slot.req.max_new, slot.pos, self.max_len, self.eos
+                tok, len(slot.req.out), slot.req.max_new, slot.pos,
+                self._seq_capacity() if self.chunked else self.max_len, self.eos
             ):
                 slot.req.done = True
                 self.finished.append(slot.req)
                 self._free_slot(i)
             else:
                 self._next_tok[i] = tok
-        return len(active)
+        return served + len(active)
 
     def run_to_completion(self, max_ticks: int = 10_000):
         ticks = 0
@@ -303,7 +511,7 @@ class PagedEngine:
             served = self.step()
             ticks += 1
             if served == 0 and self.queue and not self._active():
-                raise RuntimeError(
+                raise PagePoolExhaustedError(
                     "pool too small to admit the pending request "
                     f"(need pages for {len(self.queue[0].prompt)} prompt tokens, "
                     f"free={self._available_pages()}, watermark={self.watermark})"

@@ -1,5 +1,23 @@
 import pytest
 
+try:  # optional dep: property tests importorskip hypothesis themselves
+    import hypothesis
+
+    # "ci" profile: bounded examples, no deadline flake, and derandomized —
+    # a pinned seed derived from each test, so CI runs are reproducible.
+    # CI selects it explicitly with --hypothesis-profile=ci (the plugin
+    # applies the flag in pytest_configure, after this import, so it wins).
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=20, derandomize=True
+    )
+    # "dev" (local default): same bounds but RANDOMIZED, so repeated local
+    # runs keep exploring fresh inputs.  deadline=None — jit compiles
+    # inside examples blow any per-example deadline on CPU.
+    hypothesis.settings.register_profile("dev", deadline=None, max_examples=20)
+    hypothesis.settings.load_profile("dev")
+except ImportError:  # pragma: no cover
+    pass
+
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running (512-device dry-run) tests")

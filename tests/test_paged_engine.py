@@ -12,7 +12,11 @@ from repro.core.calibrate import default_universal_codebooks
 from repro.launch.batching import ContinuousBatcher
 from repro.models import zoo
 from repro.models.layers import Runtime
-from repro.serving.engine import PagedEngine
+from repro.serving.engine import (
+    PagedEngine,
+    PagePoolExhaustedError,
+    PromptTooLongError,
+)
 from repro.serving.generate import Request, greedy_generate
 from repro.serving.pages import PagePool
 from repro.serving.prefix import PrefixCache, chunk_hashes
@@ -176,6 +180,102 @@ def test_refused_admission_does_not_orphan_reclaimable_pages():
     eng.watermark = 1  # and the pages are still claimable afterwards
     assert eng._try_admit(big, 0)
     assert eng.stats["prefix_hits"] == hits_before + 2
+
+
+@pytest.mark.parametrize("chunked", (False, True))
+def test_refused_admission_is_side_effect_free(chunked):
+    """The full non-mutating-peek contract: a refused _try_admit must not
+    unpark reclaimable pages, reorder the prefix LRU, bump
+    prefix_hits/prefix_misses (or any stat), touch refcounts, or leave
+    anything in the slot/table state."""
+    api, params = _api_params("bf16")
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, CFG.vocab, size=2 * PS).astype(np.int32)
+    b = rng.integers(0, CFG.vocab, size=2 * PS).astype(np.int32)
+    eng = PagedEngine(
+        api, params, n_slots=2, max_len=MAX_LEN, page_size=PS, n_pages=10,
+        chunked_prefill=chunked, prefill_chunk=PS,
+    )
+    # park two distinct 2-page prefixes with a known LRU order (a older)
+    _run(eng, [np.concatenate([a, a[:3]])], 2)
+    _run(eng, [np.concatenate([b, b[:3]])], 2)
+    assert eng.prefix.reclaimable_count() == 4
+
+    lru_before = list(eng.prefix.reclaimable)
+    stats_before = dict(eng.stats)
+    refcounts_before = eng.pool_mgr.refcount.copy()
+    free_before = list(eng.pool_mgr.free)
+    tables_before = eng.tables.copy()
+
+    eng.watermark = 10  # force refusal
+    big = Request(rid=9, prompt=np.concatenate([a, a[:5]]), max_new=2)
+    for _ in range(3):  # re-scanned repeatedly, like a waiting head-of-line
+        assert not eng._try_admit(big, 0)
+
+    assert list(eng.prefix.reclaimable) == lru_before  # order untouched
+    assert dict(eng.stats) == stats_before  # incl. prefix_hits/misses
+    np.testing.assert_array_equal(eng.pool_mgr.refcount, refcounts_before)
+    assert list(eng.pool_mgr.free) == free_before
+    np.testing.assert_array_equal(eng.tables, tables_before)
+    assert all(s.req is None for s in eng.slots)
+
+
+# ------------------------------------------------------------ typed errors
+def test_prompt_too_long_error_non_chunked_only():
+    """plen >= max_len: typed error from the non-chunked slab path; the
+    chunked path has no such limit (its block tables grow)."""
+    api, params = _api_params("bf16")
+    long_prompt = _prompts((MAX_LEN,))[0]
+    eng = PagedEngine(api, params, n_slots=1, max_len=MAX_LEN, page_size=PS)
+    with pytest.raises(PromptTooLongError, match="chunked_prefill"):
+        eng._try_admit(Request(rid=0, prompt=long_prompt, max_new=2), 0)
+
+    eng_ck = PagedEngine(
+        api, params, n_slots=1, max_len=MAX_LEN, page_size=PS, n_pages=12,
+        chunked_prefill=True, prefill_chunk=PS,
+    )
+    got, _ = _run(eng_ck, [long_prompt], 2)
+    assert len(got[0]) == 3  # served fine: first token + 2 decode tokens
+
+
+def test_pool_exhausted_error_names_watermark():
+    """An unserveable head-of-line request surfaces as a typed allocator
+    error whose message names the watermark."""
+    api, params = _api_params("bf16")
+    eng = PagedEngine(
+        api, params, n_slots=1, max_len=MAX_LEN, page_size=PS, n_pages=3, watermark=2
+    )
+    eng.submit(Request(rid=0, prompt=_prompts((9,))[0], max_new=2))
+    with pytest.raises(PagePoolExhaustedError, match="watermark=2"):
+        eng.run_to_completion()
+
+
+def test_stats_accounting_after_forced_preemption():
+    """prefix_evictions / preemptions / peak_pages after a run that forces
+    both a reclaimable-page eviction and a preemption."""
+    api, params = _api_params("bf16")
+    rng = np.random.default_rng(11)
+    parked = rng.integers(0, CFG.vocab, size=2 * PS).astype(np.int32)
+    eng = PagedEngine(
+        api, params, n_slots=2, max_len=MAX_LEN, page_size=PS,
+        n_pages=6, watermark=1,
+    )
+    # park 2 registered prefix pages (refcount 0, kept for reuse)
+    _run(eng, [np.concatenate([parked, parked[:3]])], 2)
+    assert eng.prefix.reclaimable_count() == 2
+    assert eng.stats["preemptions"] == 0 and eng.stats["prefix_evictions"] == 0
+
+    # two fresh long-decode sequences: admitting + decoding them must first
+    # evict the parked pages (allocator dry) and then preempt the youngest
+    prompts = _prompts((9, 7))
+    ref, _ = _run(
+        PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS), prompts, 10
+    )
+    got, _ = _run(eng, prompts, 10)
+    assert got == ref  # eviction + preemption stay greedy-exact
+    assert eng.stats["prefix_evictions"] == 2  # both parked pages reclaimed
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["peak_pages"] == 5  # ran the 5-real-page pool dry
 
 
 # ------------------------------------------------------------- unit pieces

@@ -66,6 +66,57 @@ def test_kernel_masks_beyond_length():
     np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
 
 
+# ------------------------------------------------------------- boundaries
+@pytest.mark.parametrize("kind", ("bf16", "int8", "bcq4"))
+def test_length_exactly_at_page_boundary(kind):
+    """lengths == maxp·page_size: every token of every page is live and the
+    final page's mask admits its last token (off-by-one hotspot)."""
+    pool = _pool(kind)
+    maxp = 3
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 0]], jnp.int32)
+    lengths = jnp.asarray([maxp * PS, 2 * PS], jnp.int32)  # full table / full pages
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, HKV, D))
+    ref = kref.paged_attention_ref(q, pool, bt, lengths, kind, CFG, CB)
+    got = paged_attention(q, pool, bt, lengths, kind, CFG, CB, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_single_token_sequences_every_page_slot():
+    """length-1 sequences, one per distinct pool page: only (page, offset 0)
+    is visible, wherever the page lives in the pool."""
+    pool = _pool("bf16")
+    b = P - 1  # one sequence per real page
+    bt = jnp.stack([jnp.asarray([p, 0, 0], jnp.int32) for p in range(1, P)])
+    lengths = jnp.ones((b,), jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, HKV, D))
+    ref = kref.paged_attention_ref(q, pool, bt, lengths, "bf16", CFG, CB)
+    got = paged_attention(q, pool, bt, lengths, "bf16", CFG, CB, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+    # a length-1 output is attention over exactly one token: v itself
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(pool["v"][1:, 0].astype(jnp.float32)),
+        atol=2e-5, rtol=2e-5,
+    )
+
+
+def test_null_padded_table_beyond_tail():
+    """Block tables padded entirely with NULL_PAGE beyond the tail: the
+    null page's contents (scratch target for idle slots) must be invisible,
+    however long the padding."""
+    pool = _pool("bf16")
+    bt = jnp.asarray([[3, 0, 0, 0, 0, 0]], jnp.int32)  # 1 live page, 5 null
+    lengths = jnp.asarray([5], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(8), (1, HKV, D))
+    out_a = paged_attention(q, pool, bt, lengths, "bf16", CFG, interpret=True)
+    pool2 = dict(pool)
+    pool2["k"] = pool["k"].at[0].set(1e6)  # poison the null page
+    pool2["v"] = pool["v"].at[0].set(-1e6)
+    out_b = paged_attention(q, pool2, bt, lengths, "bf16", CFG, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+    ref = kref.paged_attention_ref(q, pool, bt, lengths, "bf16", CFG, CB)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
 def test_model_paged_gather_matches_kernel():
     """The model's jnp gather+dequant decode path and the Pallas kernel
     agree on the same pool/table state (bcq4, GQA)."""

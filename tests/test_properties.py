@@ -15,8 +15,8 @@ from repro.core import bcq, formats
 from repro.core.bcq import BCQConfig, fit_lobcq
 from repro.core.lloyd_max import lloyd_max_1d, quantile_init, quantize_to_levels
 
-hypothesis.settings.register_profile("ci", deadline=None, max_examples=20)
-hypothesis.settings.load_profile("ci")
+# profiles live in tests/conftest.py: "dev" (randomized) is the default;
+# CI selects the derandomized "ci" profile via --hypothesis-profile=ci
 
 CFG = BCQConfig()
 _DATA = jax.random.laplace(jax.random.PRNGKey(0), (60000,))

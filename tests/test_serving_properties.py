@@ -1,0 +1,154 @@
+"""Stateful Hypothesis property suite over the serving allocator pair
+(PagePool + PrefixCache), driving the exact lifecycle the PagedEngine
+uses: alloc → register → ref/deref → park-reclaimable → revive / evict.
+
+Invariants checked after EVERY rule:
+* refcounts are never negative (and the null page's stays 0),
+* a page is never simultaneously on the allocator free list AND parked in
+  the prefix LRU,
+* ``evict_one`` never reclaims a referenced page,
+* revive/ref/forget round-trips preserve the conservation law
+  ``available() + in_use == n_pages - 1`` (every non-null page is exactly
+  one of: free, actively referenced, or parked reclaimable),
+* the prefix registration maps stay a bijection.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # degrade to skip, not error
+
+import hypothesis.strategies as st
+from hypothesis.stateful import RuleBasedStateMachine, invariant, precondition, rule
+
+from repro.serving.pages import NULL_PAGE, PagePool
+from repro.serving.prefix import PrefixCache
+
+# profiles live in tests/conftest.py: "dev" (randomized) is the default;
+# CI selects the derandomized "ci" profile via --hypothesis-profile=ci
+
+N_PAGES = 9
+
+
+class PoolPrefixMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.pool = PagePool(N_PAGES)
+        self.prefix = PrefixCache()
+        # model state mirroring the engine's view
+        self.active: set[int] = set()  # refcount > 0
+        self.parked: set[int] = set()  # refcount 0, kept by the prefix LRU
+        self.next_hash = 0
+
+    # ------------------------------------------------------------- rules
+    @rule()
+    def alloc(self):
+        pid = self.pool.alloc()
+        if pid is None:
+            assert self.pool.available() == 0
+        else:
+            assert pid != NULL_PAGE and self.pool.refcount[pid] == 1
+            self.active.add(pid)
+
+    @precondition(lambda self: self.active)
+    @rule(data=st.data())
+    def ref(self, data):
+        pid = data.draw(st.sampled_from(sorted(self.active)))
+        before = self.pool.refcount[pid]
+        self.pool.ref(pid)
+        assert self.pool.refcount[pid] == before + 1
+
+    @precondition(lambda self: any(not self.prefix.knows(p) for p in self.active))
+    @rule(data=st.data())
+    def register(self, data):
+        cands = sorted(p for p in self.active if not self.prefix.knows(p))
+        pid = data.draw(st.sampled_from(cands))
+        h = ("h", self.next_hash)
+        self.next_hash += 1
+        self.prefix.register(h, pid)
+        assert self.prefix.knows(pid)
+
+    @precondition(lambda self: self.active)
+    @rule(data=st.data())
+    def deref(self, data):
+        """The engine's _drop_page: park registered pages, free the rest."""
+        pid = data.draw(st.sampled_from(sorted(self.active)))
+        if self.pool.deref(pid):
+            self.active.discard(pid)
+            if self.prefix.knows(pid):
+                self.prefix.mark_reclaimable(pid)
+                self.parked.add(pid)
+            else:
+                self.pool.release(pid)
+
+    @precondition(lambda self: self.parked)
+    @rule(data=st.data())
+    def revive(self, data):
+        """A prefix hit on a parked page: lookup unparks, pool revives."""
+        pid = data.draw(st.sampled_from(sorted(self.parked)))
+        h = self.prefix.hash_of[pid]
+        got = self.prefix.lookup(h)
+        assert got == pid
+        self.pool.revive(pid)
+        self.parked.discard(pid)
+        self.active.add(pid)
+
+    @rule()
+    def evict_one(self):
+        before = set(self.parked)
+        victim = self.prefix.evict_one()
+        if victim is None:
+            assert not before
+            return
+        # never reclaims a referenced page; always the parked set's LRU
+        assert victim in before
+        assert self.pool.refcount[victim] == 0
+        assert not self.prefix.knows(victim)
+        self.pool.release(victim)
+        self.parked.discard(victim)
+
+    @precondition(lambda self: any(self.prefix.knows(p) for p in self.active))
+    @rule(data=st.data())
+    def forget_active(self, data):
+        """COW replacement: an active page loses its registration but stays
+        referenced (it must NOT become evictable or free)."""
+        cands = sorted(p for p in self.active if self.prefix.knows(p))
+        pid = data.draw(st.sampled_from(cands))
+        self.prefix.forget(pid)
+        assert not self.prefix.knows(pid)
+        assert self.pool.refcount[pid] > 0
+
+    # -------------------------------------------------------- invariants
+    @invariant()
+    def refcounts_never_negative(self):
+        assert (self.pool.refcount >= 0).all()
+        assert self.pool.refcount[NULL_PAGE] == 0
+
+    @invariant()
+    def never_free_and_parked(self):
+        free = set(self.pool.free)
+        assert not (free & set(self.prefix.reclaimable)), (
+            "page simultaneously free and parked in the prefix LRU"
+        )
+        assert NULL_PAGE not in free
+
+    @invariant()
+    def conservation(self):
+        # every non-null page is exactly one of: free / active / parked
+        assert self.pool.available() + len(self.active) + len(self.parked) == N_PAGES - 1
+        assert not (self.active & self.parked)
+        for pid in self.active:
+            assert self.pool.refcount[pid] > 0
+        for pid in self.parked:
+            assert self.pool.refcount[pid] == 0 and pid not in self.pool.free
+
+    @invariant()
+    def parked_set_matches_lru(self):
+        assert set(self.prefix.reclaimable) == self.parked
+
+    @invariant()
+    def registration_bijection(self):
+        assert len(self.prefix.by_hash) == len(self.prefix.hash_of)
+        for h, pid in self.prefix.by_hash.items():
+            assert self.prefix.hash_of[pid] == h
+
+
+TestPoolPrefixProperties = PoolPrefixMachine.TestCase
