@@ -28,7 +28,13 @@ and, for the chunked-prefill engine (PagedEngine(chunked_prefill=True)):
 * analytic prefill compute/bytes saved by the hits: GEMM FLOPs
   (2·weights·tokens_skipped), attention FLOPs (4·H·D·Σ context per
   skipped query), and the KV-page HBM bytes neither recomputed nor
-  rewritten.
+  rewritten,
+
+and a SEQUENCE-FORKING pass: one prompt forked best-of-n ways
+(``Request(n_samples=n)`` — prompt pages shared by refcount, divergent
+tail pages copy-on-write) against the n-independent-requests baseline,
+reporting pages-per-sibling both ways, COW copy counts, and the analytic
+HBM page bytes the fork never materialized.
 
 Everything lands in ``BENCH_paged.json`` (CI artifact).
 
@@ -55,7 +61,7 @@ from repro.launch.batching import ContinuousBatcher  # noqa: E402
 from repro.models import zoo  # noqa: E402
 from repro.models.layers import Runtime  # noqa: E402
 from repro.serving.engine import PagedEngine  # noqa: E402
-from repro.serving.generate import Request  # noqa: E402
+from repro.serving.generate import Request, SamplingParams  # noqa: E402
 
 
 def token_slot_bytes(kind: str, n_kv: int, d_head: int, cfg: BCQConfig) -> float:
@@ -178,6 +184,27 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     )
     skipped_per_req = [(len(r.prompt) - 1) // ps * ps for r in warm_reqs]
 
+    # ---- sequence forking: ONE prompt forked n ways (prompt pages shared
+    # by refcount, divergent tails COW) vs the n-independent-requests
+    # baseline that prefills and stores every page n times.
+    n_fork = 3
+    fork_prompt = rng.integers(0, cfg.vocab, size=2 * ps + ps // 2).astype(np.int32)
+    eng_fork = PagedEngine(api, params, n_slots=n_fork, max_len=max_len, page_size=ps)
+    eng_fork.submit(Request(
+        rid=0, prompt=fork_prompt, max_new=args.gen, n_samples=n_fork,
+        sampling=SamplingParams(temperature=0.8, seed=13),
+    ))
+    fin_fork, _ = eng_fork.run_to_completion()
+    assert len([r for r in fin_fork if r.error is None]) == n_fork
+
+    eng_ind = PagedEngine(
+        api, params, n_slots=n_fork, max_len=max_len, page_size=ps,
+        prefix_caching=False,  # truly independent: no page sharing at all
+    )
+    for s in range(n_fork):
+        eng_ind.submit(Request(rid=s, prompt=fork_prompt, max_new=args.gen))
+    eng_ind.run_to_completion()
+
     tsb = token_slot_bytes(kind, cfg.n_kv_heads, cfg.head_dim, bcq_cfg)
     mean_live = np.mean([len(r.prompt) + r.max_new // 2 for r in reqs])
     contig_bytes = args.slots * max_len * tsb * cfg.n_layers
@@ -208,6 +235,22 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         "t_warm_wallclock_s": t_warm,
         "t_cold_wallclock_s": t_chunked,
     }
+    page_bytes = ps * tsb * cfg.n_layers
+    row.update({
+        "fork_n": n_fork,
+        "fork_prompt_tokens": len(fork_prompt),
+        "fork_peak_pages": eng_fork.stats["peak_pages"],
+        "fork_baseline_pages": eng_ind.stats["peak_pages"],
+        "fork_pages_per_sibling": eng_fork.stats["peak_pages"] / n_fork,
+        "fork_baseline_pages_per_sibling": eng_ind.stats["peak_pages"] / n_fork,
+        # analytic: pages the fork never materialized, at this cache
+        # kind's per-page footprint (all layers)
+        "fork_hbm_bytes_saved": (
+            (eng_ind.stats["peak_pages"] - eng_fork.stats["peak_pages"]) * page_bytes
+        ),
+        "fork_shared_pages": eng_fork.stats["shared_pages"],
+        "fork_cow_copies": eng_fork.stats["cow_copies"],
+    })
     row.update(prefill_savings(cfg, skipped_per_req, kind, bcq_cfg))
     return row
 
@@ -242,6 +285,8 @@ def bench(args) -> bool:
             r["match"] and r["match_chunked"]
             and r["paged_bytes"] < r["contig_bytes"]
             and zero_flops_over_hits
+            # forking must beat n independent requests on pages/sibling
+            and r["fork_pages_per_sibling"] < r["fork_baseline_pages_per_sibling"]
         )
         print(
             f"{r['kind']:6s} {str(r['match'] and r['match_chunked']):5s} "
@@ -259,6 +304,16 @@ def bench(args) -> bool:
             f"attn {r['prefill_attn_flops_saved']/1e6:,.2f} MFLOPs, "
             f"KV-write HBM {r['prefill_hbm_bytes_saved']:,.0f} B "
             f"({'zero attn FLOPs over cached pages' if zero_flops_over_hits else 'UNEXPECTED prefill tokens'})"
+        )
+        print(
+            f"{'':6s} fork best-of-{r['fork_n']} "
+            f"({r['fork_prompt_tokens']}-token prompt): "
+            f"{r['fork_pages_per_sibling']:.2f} pages/sibling vs "
+            f"{r['fork_baseline_pages_per_sibling']:.2f} independent "
+            f"({r['fork_peak_pages']}/{r['fork_baseline_pages']} pages, "
+            f"{r['fork_shared_pages']} shared refs, "
+            f"{r['fork_cow_copies']} COW copies, "
+            f"HBM saved {r['fork_hbm_bytes_saved']:,.0f} B)"
         )
     report = {
         "config": {

@@ -14,6 +14,11 @@ This is host-side orchestration (pure Python around jitted steps) — the
 piece a real W4A4 deployment wraps around `zoo.decode_fn`.  Tested in
 tests/test_batching.py with deterministic greedy outputs equal to
 sequential single-request serving.
+
+Requests with seeded ``SamplingParams`` sample their tokens here too
+(same position-keyed streams as the paged engine); ``n_samples`` forking,
+however, is a paged-engine feature — the contiguous cache has no page
+sharing, so this engine serves every request as a single sequence.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import numpy as np
 from repro.serving.generate import (  # noqa: F401  (Request re-exported)
     Request,
     next_greedy_tokens,
+    pick_token,
     sequence_finished,
 )
 
@@ -56,6 +62,16 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request):
+        if req.n_samples != 1:
+            # forking is a paged-engine feature (page sharing by refcount);
+            # reject rather than silently serving one sample as if it were n
+            req.error = (
+                f"n_samples={req.n_samples}: sequence forking needs the "
+                "paged engine (serving.PagedEngine)"
+            )
+            req.done = True
+            self.finished.append(req)
+            return
         self.queue.append(req)
 
     def _admit(self):
@@ -74,6 +90,10 @@ class ContinuousBatcher:
                 self.caches, c1,
             )
             first = int(next_greedy_tokens(logits)[0])
+            # seeded sampling (temperature > 0) replaces the argmax token;
+            # greedy requests pass the argmax through untouched
+            row = None if req.sampling.greedy else logits[0, -1, :]
+            first = pick_token(row, first, req, len(req.prompt))
             req.out.append(first)
             slot.req = req
             slot.pos = len(req.prompt)
@@ -115,7 +135,10 @@ class ContinuousBatcher:
             nxt = next_greedy_tokens(logits)
             for i in idxs:
                 slot = self.slots[i]
-                tok = int(nxt[i])
+                row = None if slot.req.sampling.greedy else logits[i, -1, :]
+                # key by the SAMPLED token's absolute index (pos + 1) —
+                # pos is the position of the token this tick consumes
+                tok = pick_token(row, int(nxt[i]), slot.req, slot.pos + 1)
                 slot.req.out.append(tok)
                 slot.pos += 1
                 if sequence_finished(

@@ -22,6 +22,14 @@ written prefix rounded up to N (bucketed dequantization).
 packed 4-bit buffers and every linear dispatched to the fused
 quantize→decode→GEMM kernel (kernels/bcq_linear.py; ``--unfused`` falls
 back to in-graph decode_packed_weight + einsum for comparison).
+``--best-of N`` serves every prompt as an N-way SEQUENCE FORK through the
+paged engine: one prefill, then N sibling decode branches that share all
+prompt pages by refcount (zero copies, zero recompute) and copy-on-write
+only their divergent tail page.  ``--temperature T`` (with ``--top-k`` /
+``--seed``) turns on seeded temperature sampling — deterministic per
+(seed, sample index, position), so runs reproduce exactly; T=0 keeps the
+exact greedy path, making the fork degenerate (all siblings identical —
+useful for verifying page accounting without sampling noise).
 """
 from __future__ import annotations
 
@@ -40,7 +48,11 @@ from repro.core.calibrate import default_universal_codebooks
 from repro.data.pipeline import DataConfig, batch_at
 from repro.models import zoo
 from repro.models.layers import Runtime
-from repro.serving.generate import Request, greedy_generate  # noqa: F401 (re-export)
+from repro.serving.generate import (  # noqa: F401 (re-export)
+    Request,
+    SamplingParams,
+    greedy_generate,
+)
 
 
 def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int,
@@ -85,6 +97,18 @@ def main():
                     help="also serve with packed 4-bit weights (fused kernel path)")
     ap.add_argument("--unfused", action="store_true",
                     help="with --packed: use decode_packed_weight + einsum instead")
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="fork every prompt into N sampled siblings through "
+                         "the paged engine (prompt pages shared by refcount, "
+                         "tail pages copy-on-write)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="seeded sampling temperature (0 = exact greedy; "
+                         "with --best-of 0 makes the fork degenerate)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the top-k logits only (0 = full vocab)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed — tokens are deterministic per "
+                         "(seed, sample index, position)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -116,7 +140,7 @@ def main():
         0,
     )["tokens"]
     max_len = args.prompt_len + args.gen + 1
-    if args.paged and max_len % args.page_size:
+    if (args.paged or args.best_of > 1) and max_len % args.page_size:
         max_len += args.page_size - max_len % args.page_size
 
     t0 = time.time()
@@ -201,6 +225,49 @@ def main():
                 f"agreement vs contiguous {agree_ck*100:.1f}% "
                 "(W4A4 act s_X sees chunk-sized batches)"
             )
+
+    if args.best_of > 1:
+        # sequence forking: each prompt prefills ONCE, then forks into
+        # --best-of sibling decode branches sharing every prompt page by
+        # refcount; only divergent tail pages are copy-on-write copied
+        from repro.serving.engine import PagedEngine
+
+        sp = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, seed=args.seed
+        )
+        eng_f = PagedEngine(
+            api_q, params_q, n_slots=args.batch * args.best_of,
+            max_len=max_len, page_size=args.page_size,
+        )
+        t0 = time.time()
+        for i in range(args.batch):
+            eng_f.submit(Request(
+                rid=i, prompt=np.asarray(prompts[i]), max_new=args.gen - 1,
+                n_samples=args.best_of, sampling=sp,
+            ))
+        fin_f, _ = eng_f.run_to_completion()
+        t_f = time.time() - t0
+        by_rid: dict = {}
+        for r in fin_f:
+            by_rid.setdefault(r.rid, {})[r.sample_idx] = r.out
+        s = eng_f.stats
+        print(
+            f"best-of: {args.batch * args.best_of * args.gen / t_f:8.1f} tok/s "
+            f"({args.best_of} forked samples/prompt, T={args.temperature}, "
+            f"seed={args.seed}) — forks {s['forks']}, shared pages "
+            f"{s['shared_pages']}, COW copies {s['cow_copies']}, "
+            f"peak pages {s['peak_pages']} "
+            f"(n-independent would prefill {args.best_of}× and share nothing)"
+        )
+        if args.temperature == 0 and args.paged:
+            # degenerate fork: every sibling must replay the paged greedy row
+            exact = all(
+                by_rid[i][k][: args.gen] == [int(t) for t in got_paged[i]]
+                for i in range(args.batch) for k in by_rid[i]
+            )
+            print(f"best-of @ T=0: siblings {'==' if exact else '!='} unforked greedy")
+        for k in sorted(by_rid.get(0, {})):
+            print(f"  rid0 sample{k}:", by_rid[0][k][:10])
 
     print("sample bf16:", np.asarray(ref[0][:10]))
     print("sample w4a4:", np.asarray(got[0][:10]))

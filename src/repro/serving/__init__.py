@@ -6,14 +6,15 @@
                immutable full pages across requests
 - engine.py  — PagedEngine: continuous batching over the page pool with
                admission control and preemption-by-eviction
-- generate.py — shared greedy-decode helpers (all serving paths)
+- generate.py — shared decode helpers: greedy loop, stop rule, and
+               seeded temperature sampling (all serving paths)
 """
 from repro.serving.engine import (
     PagedEngine,
     PagePoolExhaustedError,
     PromptTooLongError,
 )
-from repro.serving.generate import greedy_generate
+from repro.serving.generate import Request, SamplingParams, greedy_generate
 from repro.serving.pages import NULL_PAGE, PagePool
 from repro.serving.prefix import PrefixCache
 
@@ -21,6 +22,8 @@ __all__ = [
     "PagedEngine",
     "PagePoolExhaustedError",
     "PromptTooLongError",
+    "Request",
+    "SamplingParams",
     "greedy_generate",
     "PagePool",
     "PrefixCache",

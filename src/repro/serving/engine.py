@@ -37,6 +37,26 @@ decode retrace per growth), so a prompt longer than ``max_len`` serves
 fine as long as the pool has pages — ``PromptTooLongError`` can only come
 out of the non-chunked path, whose prefill materializes a max_len slab.
 
+**Sequence forking / best-of-n** (``Request(n_samples=n)``): after a
+request's prefill completes (either admission path), the engine forks the
+slot into n sibling slots that share EVERY prompt page by refcount — one
+``PagePool.ref`` per sibling per page, zero page copies, zero recompute.
+Each sibling owns its block-table row, position, output list, and
+``sample_idx`` (which seeds its token stream, see
+``generate.SamplingParams``).  Siblings share the prompt's partial tail
+page until their first token write, which triggers the copy-on-write
+branch of ``_ensure_tail_page``: the tail page is duplicated bit-exactly
+(``pages.copy_page`` moves every quant leaf, per-page scale/selector
+metadata included) into a private page and the source loses one ref —
+n-1 copies for n siblings (the last writer inherits the original).
+Admission reserves the sibling slots (chunked mode holds them across
+prefill ticks via ``_PagedSlot.reserved_by``), preemption requeues a
+sibling as its OWN prompt+output (``n_samples`` already 1 post-fork, so
+it never re-forks) dropping only its refs, and ``_free_slot`` releases a
+not-yet-forked parent's reservations.  With temperature 0 the fork is
+degenerate — every sibling replays the greedy stream bit-exactly
+(tests/test_forking.py).
+
 Greedy outputs are token-for-token identical to the contiguous engine:
 the pool reuses cache_write's quantization layouts page by page, gathered
 decode attention sees the same dequantized values with the same shapes
@@ -58,8 +78,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import pages as pages_lib
-from repro.serving.generate import Request, next_greedy_tokens, sequence_finished
-from repro.serving.pages import NULL_PAGE, PagePool, pages_needed
+from repro.serving.generate import (
+    Request,
+    next_greedy_tokens,
+    pick_token,
+    sequence_finished,
+)
+from repro.serving.pages import NULL_PAGE, PagePool, live_pages, pages_needed
 from repro.serving.prefix import PrefixCache, chunk_hashes
 
 
@@ -84,6 +109,10 @@ class _PagedSlot:
     mode: str = "decode"  # 'decode' | 'prefill' (chunked admission in flight)
     pending: Optional[np.ndarray] = None  # full prompt while mode == 'prefill'
     hashes: Optional[list] = None  # full-page chain hashes of ``pending``
+    # free slot held for a forking request's sibling (parent slot index):
+    # chunked admission claims sibling slots up front so the fork at
+    # prefill completion — many ticks later — cannot find them taken
+    reserved_by: Optional[int] = None
 
 
 class PagedEngine:
@@ -153,11 +182,36 @@ class PagedEngine:
             "prefix_evictions": 0, "peak_pages": 0, "decode_ticks": 0,
             "prefill_chunks": 0, "prefill_tokens": 0,
             "prefill_tokens_skipped": 0,
+            "forks": 0, "cow_copies": 0, "shared_pages": 0,
         }
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request):
+        """Queue a request — after validating it.  An invalid request is
+        rejected into ``finished`` with ``req.error`` set instead of
+        raising out of ``step()``/``run_to_completion`` mid-flight, which
+        would abandon every other in-flight request (the serving loop must
+        survive one bad prompt)."""
+        if not (1 <= req.n_samples <= self.n_slots):
+            req.error = (
+                f"n_samples={req.n_samples} outside [1, n_slots={self.n_slots}]"
+            )
+        elif not self.chunked and len(req.prompt) >= self.max_len:
+            req.error = self._too_long_msg(len(req.prompt))
+        if req.error is not None:
+            req.done = True
+            self.finished.append(req)
+            return
         self.queue.append(req)
+
+    def _too_long_msg(self, plen: int) -> str:
+        """One source of truth for submit()'s rejection marker and the
+        typed PromptTooLongError on the direct _try_admit path."""
+        return (
+            f"prompt of {plen} tokens does not fit the non-chunked "
+            f"prefill slab (max_len={self.max_len}); serve it with "
+            f"chunked_prefill=True"
+        )
 
     # ------------------------------------------------------- page plumbing
     def _alloc_page(self) -> Optional[int]:
@@ -183,10 +237,18 @@ class PagedEngine:
                 self.pool_mgr.release(pid)
 
     def _free_slot(self, i: int):
+        """Release slot i: drop ONLY this slot's page references (a forked
+        sibling shares pages with its siblings — each row carries exactly
+        one ref per page, so per-row deref is fork-correct by
+        construction) and free any sibling-slot reservations a
+        not-yet-forked parent in slot i was holding."""
         for pid in self.tables[i]:
             self._drop_page(int(pid))
         self.tables[i] = NULL_PAGE
         self.slots[i] = _PagedSlot()
+        for s in self.slots:
+            if s.reserved_by == i:
+                s.reserved_by = None
 
     def _available_pages(self) -> int:
         return self.pool_mgr.available() + self.prefix.reclaimable_count()
@@ -208,12 +270,19 @@ class PagedEngine:
         return self.tables.shape[1] * self.ps
 
     # -------------------------------------------------------- admission
-    def _plan_prefix_hits(self, prompt: np.ndarray) -> tuple[list, list[int]]:
+    def _plan_prefix_hits(self, req: Request, prompt: np.ndarray) -> tuple[list, list[int]]:
         """Longest chain of full-page prefix hits (non-mutating peek —
         a refused admission must not unpark reclaimable pages, reorder the
         prefix LRU, or touch stats, since the head-of-line request is
-        re-scanned every tick)."""
-        hashes = chunk_hashes(prompt, self.ps) if self.prefix_caching else []
+        re-scanned every tick).  The prompt digests are memoized on the
+        request so that re-scan costs O(pages) peeks, not O(plen) hashing."""
+        if not self.prefix_caching:
+            hashes = []
+        elif req._hash_cache is not None and req._hash_cache[0] == self.ps:
+            hashes = req._hash_cache[1]
+        else:
+            hashes = chunk_hashes(prompt, self.ps)
+            req._hash_cache = (self.ps, hashes)
         hits: list[int] = []
         for h in hashes:
             pid = self.prefix.peek(h)
@@ -222,10 +291,18 @@ class PagedEngine:
             hits.append(pid)
         return hashes, hits
 
-    def _claim_hits(self, hashes, hits, n_prompt_pages: int, table: np.ndarray):
-        """Commit to the planned hit pages: revive/ref them, count stats."""
+    def _claim_hits(self, hashes, hits, n_cacheable: int, table: np.ndarray):
+        """Commit to the planned hit pages: revive/ref them, count stats.
+
+        ``n_cacheable`` is the count of prompt pages that COULD have hit:
+        full pages only (a prompt's trailing partial page is never
+        cacheable by design), and in chunked mode also excluding the
+        deliberately-trimmed final hit (the last-chunk page kept to
+        produce the prompt's last-position logits).  Counting misses over
+        all prompt pages instead used to report a 50% hit rate for a
+        100%-warm resubmission of a 17-token prompt at page_size=16."""
         self.stats["prefix_hits"] += len(hits)
-        self.stats["prefix_misses"] += n_prompt_pages - len(hits)
+        self.stats["prefix_misses"] += max(0, n_cacheable - len(hits))
         for i, (h, pid) in enumerate(zip(hashes, hits)):
             claimed = self.prefix.lookup(h)  # unparks the reclaimable page
             assert claimed == pid
@@ -241,22 +318,18 @@ class PagedEngine:
         if self.chunked:
             return self._try_admit_chunked(req, prompt, plen, slot_idx)
         if plen >= self.max_len:
-            raise PromptTooLongError(
-                f"prompt of {plen} tokens does not fit the non-chunked "
-                f"prefill slab (max_len={self.max_len}); serve it with "
-                f"chunked_prefill=True"
-            )
+            raise PromptTooLongError(self._too_long_msg(plen))
         n_prompt_pages = pages_needed(plen, self.ps)
         n_full = plen // self.ps
 
-        hashes, hits = self._plan_prefix_hits(prompt)
+        hashes, hits = self._plan_prefix_hits(req, prompt)
         need = n_prompt_pages - len(hits)
         if self._available_pages() < need + self.watermark:
             return False  # admission control: keep decode headroom
 
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
         scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
-        self._claim_hits(hashes, hits, n_prompt_pages, table)
+        self._claim_hits(hashes, hits, n_full, table)
         for i in range(len(hits), n_prompt_pages):
             pid = self._alloc_page()
             if pid is None:
@@ -278,20 +351,17 @@ class PagedEngine:
                 self.prefix.register(hashes[i], int(table[i]))
         self.stats["prefill_tokens"] += plen
 
-        first = int(next_greedy_tokens(logits)[0])
-        req.out.append(first)
         self.tables[slot_idx] = table
         self.slots[slot_idx] = _PagedSlot(req=req, pos=plen, admit_seq=self._admit_counter)
         self._admit_counter += 1
-        self._next_tok[slot_idx] = first
-        self._finish_if_budget_spent(slot_idx)
+        self._start_decode(slot_idx, logits)
         return True
 
     def _try_admit_chunked(self, req: Request, prompt, plen: int, slot_idx: int) -> bool:
         """Plan-only admission: claim prefix-hit pages, mark the slot
         ``prefill``; ``_prefill_tick`` then runs one chunk per step()."""
         n_prompt_pages = pages_needed(plen, self.ps)
-        hashes, hits = self._plan_prefix_hits(prompt)
+        hashes, hits = self._plan_prefix_hits(req, prompt)
         # keep ≥ 1 suffix token so the prompt's last-position logits (the
         # first generated token) come out of the final chunk
         hits = hits[: min(len(hits), (plen - 1) // self.ps)]
@@ -301,7 +371,8 @@ class PagedEngine:
 
         self._grow_tables(pages_needed(plen + req.max_new + 1, self.ps))
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
-        self._claim_hits(hashes, hits, n_prompt_pages, table)
+        # cacheable = full pages minus the hit deliberately trimmed above
+        self._claim_hits(hashes, hits, (plen - 1) // self.ps, table)
         self.stats["prefill_tokens_skipped"] += len(hits) * self.ps
 
         self.tables[slot_idx] = table
@@ -310,6 +381,17 @@ class PagedEngine:
             mode="prefill", pending=prompt, hashes=hashes,
         )
         self._admit_counter += 1
+        if req.n_samples > 1:
+            # hold the sibling slots across the (multi-tick) prefill so the
+            # fork at completion cannot find them taken; _free_slot releases
+            # the claims if this parent is preempted before it forks
+            others = [
+                j for j, s in enumerate(self.slots)
+                if s.req is None and s.reserved_by is None and j != slot_idx
+            ]
+            assert len(others) >= req.n_samples - 1, "admission gate broken"
+            for j in others[: req.n_samples - 1]:
+                self.slots[j].reserved_by = slot_idx
         return True
 
     def _finish_if_budget_spent(self, i: int) -> bool:
@@ -330,12 +412,83 @@ class PagedEngine:
         return False
 
     def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot.req is not None or not self.queue:
-                continue
-            if not self._try_admit(self.queue[0], i):
+        while self.queue:
+            free = [
+                i for i, s in enumerate(self.slots)
+                if s.req is None and s.reserved_by is None
+            ]
+            req = self.queue[0]
+            if not free or req.n_samples > len(free):
+                break  # head-of-line waits for a slot (or n sibling slots)
+            if not self._try_admit(req, free[0]):
                 break  # admission control: head-of-line blocks until pages free
             self.queue.popleft()
+
+    def _start_decode(self, i: int, logits) -> None:
+        """Prefill for slot i just produced the prompt's last-position
+        logits: emit the first token(s) and start decoding.  A request
+        with ``n_samples > 1`` FORKS here into n sibling slots sharing
+        every prompt page by refcount — one ``PagePool.ref`` per sibling
+        per page, zero page copies, zero recompute.  Each sibling is its
+        own Request (same rid, distinct sample_idx) with a private output
+        list and block-table row; the first write on the shared partial
+        tail page COWs it in ``_ensure_tail_page``."""
+        slot = self.slots[i]
+        parent = slot.req
+        greedy_tok = int(next_greedy_tokens(logits)[0])
+        row = None if parent.sampling.greedy else logits[0, -1, :]
+        if parent.n_samples == 1:
+            tok = pick_token(row, greedy_tok, parent, slot.pos)
+            parent.out.append(tok)
+            self._next_tok[i] = tok
+            self._finish_if_budget_spent(i)
+            return
+        # sibling slots: the ones chunked admission reserved for this
+        # parent first, then any free unreserved slot (non-chunked
+        # admission verified the count before prefilling)
+        n = parent.n_samples  # captured: sibling 0's demotion resets it
+        res = [j for j, s in enumerate(self.slots) if s.req is None and s.reserved_by == i]
+        free = [
+            j for j, s in enumerate(self.slots)
+            if s.req is None and s.reserved_by is None and j != i
+        ]
+        sibs = [i] + (res + free)[: n - 1]
+        assert len(sibs) == n, "fork found too few sibling slots"
+        shared = live_pages(self.tables[i])
+        children = []
+        for s_idx, j in enumerate(sibs):
+            if j == i:
+                # the submitted Request object itself becomes sibling 0, so
+                # the caller's req.done / req.out polling contract holds for
+                # forked requests too; demote n_samples so a later
+                # preemption requeues it as a single sequence, never
+                # re-forking
+                child = parent
+                child.n_samples = 1
+                child.sample_idx = 0
+            else:
+                child = Request(
+                    rid=parent.rid, prompt=parent.prompt, max_new=parent.max_new,
+                    sampling=parent.sampling, sample_idx=s_idx,
+                )
+                for pid in shared:
+                    self.pool_mgr.ref(pid)  # one ref per sibling per page
+                self.tables[j] = self.tables[i]
+                self.slots[j] = _PagedSlot(
+                    req=child, pos=slot.pos, admit_seq=self._admit_counter
+                )
+                self._admit_counter += 1
+            children.append((j, child))
+        self.stats["forks"] += 1
+        self.stats["shared_pages"] += len(shared) * (n - 1)
+        # emit first tokens only after every sibling holds its refs — a
+        # budget-spent sibling retiring here must not free pages that the
+        # remaining siblings still share
+        for j, child in children:
+            tok = pick_token(row, greedy_tok, child, self.slots[j].pos)
+            child.out.append(tok)
+            self._next_tok[j] = tok
+            self._finish_if_budget_spent(j)
 
     # ------------------------------------------------------- preemption
     def _preempt_one(self, exclude: Optional[int]) -> Optional[int]:
@@ -350,16 +503,25 @@ class PagedEngine:
         slot = self.slots[victim]
         req = slot.req
         # recompute mode: prompt grows by everything generated so far; the
-        # requeued prefill then reproduces the exact greedy continuation
-        # (req.out is shared, so tokens keep accumulating on the same list).
+        # requeued prefill then reproduces the exact continuation — greedy
+        # by argmax, sampled because token keys are (seed, sample_idx,
+        # absolute position), which recompute preserves (req.out is
+        # shared, so tokens keep accumulating on the same list).
         # A preempted PREFILLING slot requeues its whole prompt — but its
         # already-written full pages stay registered (reclaimable), so the
         # retry's prefix hits resume roughly where the chunks left off.
+        # A forked sibling requeues as its OWN prompt+output and dropped
+        # only its refs (_free_slot): n_samples is already 1 post-fork, so
+        # it never re-forks; a parent preempted BEFORE forking keeps
+        # n_samples and forks after its re-prefill.
         resumed = Request(
             rid=req.rid,
             prompt=np.concatenate([np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)]),
             max_new=req.max_new,
             out=req.out,
+            sampling=req.sampling,
+            n_samples=req.n_samples,
+            sample_idx=req.sample_idx,
         )
         self._free_slot(victim)
         self.queue.appendleft(resumed)
@@ -381,6 +543,11 @@ class PagedEngine:
     def _ensure_tail_page(self, i: int) -> bool:
         """Make sure slot i's next write position has a private page."""
         slot = self.slots[i]
+        if slot.req is None or slot.mode != "decode":
+            # slot emptied by a preemption EARLIER in this same sweep (an
+            # allocation here would land in a dead table row and leak on
+            # the next admission's row overwrite)
+            return False
         pi = slot.pos // self.ps
         pid = int(self.tables[i][pi])
         if slot.pos % self.ps == 0 and pid == NULL_PAGE:
@@ -391,11 +558,16 @@ class PagedEngine:
             return True
         if pid != NULL_PAGE and self.pool_mgr.refcount[pid] > 1:
             # copy-on-write: tail page is shared (forked sequence) — give
-            # this sequence a private copy before the token write
+            # this sequence a private copy before the token write.  The
+            # copy moves every quant leaf (per-page scale/selector
+            # metadata included), so siblings stay bit-exact; n siblings
+            # pay n-1 copies (the last writer finds refcount 1 and keeps
+            # the original).
             new = self._alloc_page_preempting(i)
             if new is None:
                 return False
             self.pool = self._copy_page(self.pool, pid, new)
+            self.stats["cow_copies"] += 1
             self._drop_page(pid)  # source may have hit refcount 0 meanwhile
             self.tables[i][pi] = new
         return True
@@ -436,14 +608,11 @@ class PagedEngine:
             for p in range(first_page, min(slot.pos // self.ps, len(slot.hashes))):
                 self.prefix.register(slot.hashes[p], int(self.tables[i][p]))
 
-        if slot.pos == plen:  # prompt done — first token, start decoding
-            first = int(next_greedy_tokens(logits)[0])
-            slot.req.out.append(first)
+        if slot.pos == plen:  # prompt done — first token(s), start decoding
             slot.mode = "decode"
             slot.pending = None
             slot.hashes = None
-            self._next_tok[i] = first
-            self._finish_if_budget_spent(i)
+            self._start_decode(i, logits)  # forks here when n_samples > 1
         return 1
 
     # ------------------------------------------------------------- ticks
@@ -489,9 +658,20 @@ class PagedEngine:
         )
         self.stats["decode_ticks"] += 1
         nxt = np.asarray(next_greedy_tokens(logits))
+        last = None  # last-position logits, fetched only if someone samples
+        if any(not self.slots[i].req.sampling.greedy for i in active):
+            last = logits[:, -1, :]
         for i in active:
             slot = self.slots[i]
-            tok = int(nxt[i])
+            # the sampled token's absolute sequence index is pos + 1: the
+            # cache holds ``pos`` tokens and this tick writes the consumed
+            # token at ``pos`` before predicting the next one (keying by
+            # ``pos`` would reuse the first token's key and break
+            # recompute-preemption exactness)
+            tok = pick_token(
+                None if last is None else last[i], int(nxt[i]), slot.req,
+                slot.pos + 1,
+            )
             slot.req.out.append(tok)
             slot.pos += 1
             if sequence_finished(

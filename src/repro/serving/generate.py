@@ -1,33 +1,126 @@
-"""Shared greedy-decoding helpers.
+"""Shared decoding helpers: the greedy loop / stop rule and seeded
+temperature sampling.
 
-One implementation of the greedy loop / stop rule, used by the
-single-batch driver (launch/serve.py, examples), the contiguous
-continuous-batching engine (launch/batching.py) and the paged engine
-(serving/engine.py) — previously copy-pasted per call-site.
+One implementation of the decode-token choice, used by the single-batch
+driver (launch/serve.py, examples), the contiguous continuous-batching
+engine (launch/batching.py) and the paged engine (serving/engine.py) —
+previously copy-pasted per call-site.
+
+**Sampling determinism contract** (``SamplingParams`` + ``sample_token``):
+the PRNG key for a token depends ONLY on ``(seed, sample_idx, absolute
+position)`` — the sampled token's own sequence index, i.e. the number of
+tokens (prompt + generated) that precede it — never on batch
+composition, slot index, or tick count.  That
+makes sampled runs (a) reproducible across processes, (b) identical for a
+sequence whether it decodes alone or fused with others, and (c) exact
+under preemption-by-eviction: a recompute-requeued sequence replays its
+prompt + generated tokens and then resamples position p with the very key
+that produced it the first time.  ``temperature == 0`` bypasses sampling
+entirely and takes the argmax path, so greedy serving stays bit-identical
+to the pre-sampling engines.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode-sampling policy (frozen — safe to share across
+    forked siblings).  ``temperature == 0`` means exact greedy argmax;
+    ``top_k == 0`` means the full vocabulary."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
 @dataclasses.dataclass
 class Request:
-    """One serving request (shared by the contiguous and paged engines)."""
+    """One serving request (shared by the contiguous and paged engines).
+
+    ``n_samples > 1`` asks the paged engine to FORK the sequence after
+    prefill into that many siblings (best-of-n / parallel sampling), each
+    sharing every prompt page by refcount and recorded in ``finished`` as
+    its own Request with this ``rid`` and a distinct ``sample_idx``.
+    The submitted object itself becomes sibling 0 (n_samples demoted to
+    1 at fork time), so ``done``/``out`` polling works unchanged.
+    ``error`` marks a request the engine rejected at submit() (e.g. an
+    oversized prompt on the non-chunked path) — it lands in ``finished``
+    with no output instead of poisoning the serving loop."""
 
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    sampling: SamplingParams = GREEDY
+    n_samples: int = 1
+    sample_idx: int = 0
+    error: Optional[str] = None
+    # engine-private memo: (page_size, chunk_hashes(prompt)) — a request
+    # blocked at the admission watermark is re-planned every tick and must
+    # not re-digest its whole (immutable) prompt each time
+    _hash_cache: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
 
 def next_greedy_tokens(logits) -> jnp.ndarray:
     """(B, S, V) logits → (B,) greedy next token at the last position."""
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def _sample_row(logits_row, key, temperature, top_k):
+    x = logits_row.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(x, min(top_k, x.shape[-1]))[0][..., -1]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    return jax.random.categorical(key, x)
+
+
+def sampling_key(sp: SamplingParams, sample_idx: int, pos: int) -> jax.Array:
+    """The deterministic per-token key: fold (sample_idx, position) into
+    the request seed.  See the module docstring for why position-keying
+    (not tick-keying) is load-bearing for preemption exactness."""
+    key = jax.random.PRNGKey(sp.seed)
+    return jax.random.fold_in(jax.random.fold_in(key, sample_idx), pos)
+
+
+def sample_token(logits_row, sp: SamplingParams, sample_idx: int, pos: int) -> int:
+    """Seeded temperature/top-k sample of ONE sequence's next token.
+
+    logits_row: (V,) last-position logits for this sequence.  Requires
+    ``sp.temperature > 0`` (greedy requests never reach the sampler)."""
+    assert sp.temperature > 0.0, "greedy requests take the argmax path"
+    key = sampling_key(sp, sample_idx, pos)
+    return int(
+        _sample_row(jnp.asarray(logits_row), key, jnp.float32(sp.temperature), sp.top_k)
+    )
+
+
+def pick_token(logits_row, greedy_tok: int, req: Request, pos: int) -> int:
+    """The shared token choice: exact argmax for greedy requests (the
+    batched ``next_greedy_tokens`` result passes through untouched, so
+    greedy serving is bit-identical to the pre-sampling engines), seeded
+    sampling otherwise."""
+    if req.sampling.greedy:
+        return greedy_tok
+    return sample_token(logits_row, req.sampling, req.sample_idx, pos)
 
 
 def sequence_finished(tok: int, n_out: int, max_new: int, pos: int, max_len: int,

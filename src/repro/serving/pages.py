@@ -14,8 +14,13 @@ inactive decode slots point at it, so scatters from idle slots land in a
 sacrificial page instead of live data.
 
 ``PagePool`` is the host-side allocator (free list + refcounts; shared
-prefix pages are refcounted and copy-on-write).  The jnp helpers below do
-the device-side page movement and are shape-stable for jit.
+prefix pages are refcounted and copy-on-write).  A page may be
+multi-owner two ways: distinct requests hitting the same prefix chain, or
+siblings of a forked sequence (best-of-n), which take one reference per
+sibling per prompt page at fork time — either way each owner drops
+exactly its own references and the last deref decides free-vs-parked.
+The jnp helpers below do the device-side page movement and are
+shape-stable for jit.
 """
 from __future__ import annotations
 
@@ -29,6 +34,11 @@ NULL_PAGE = 0
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
+
+
+def live_pages(table_row) -> list[int]:
+    """The real (non-null) page ids of one block-table row."""
+    return [int(p) for p in table_row if int(p) != NULL_PAGE]
 
 
 @dataclasses.dataclass

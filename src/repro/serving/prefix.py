@@ -14,25 +14,43 @@ by its request).  Later requests that hit it take a reference
 last owner finishes, the page is *reclaimable*: it keeps its contents and
 registration, parked in an LRU, and can be either revived by a future hit
 or evicted (LRU order) when the allocator runs dry.  Shared pages are
-immutable; writers must copy-on-write (the engine's tail pages are always
-private, so COW only triggers on forked/defensive paths).
+immutable; writers must copy-on-write.  An unforked sequence's tail page
+is always private, so COW triggers exactly on forked sequences: siblings
+share the prompt's partial tail page until their first divergent token
+write, which copies it (``pages.copy_page``) into a private page.
 """
 from __future__ import annotations
 
+import hashlib
 from collections import OrderedDict
 from typing import Iterable, Optional
 
+import numpy as np
+
 from repro.serving.pages import NULL_PAGE
 
-
-def chain_hash(prev: int, chunk: Iterable[int]) -> int:
-    """Hash of a prompt chunk conditioned on everything before it."""
-    return hash((prev, tuple(int(t) for t in chunk)))
+# chain root for the empty prefix (first chunk hashes against this)
+EMPTY_PREFIX = b""
 
 
-def chunk_hashes(prompt, page_size: int) -> list[int]:
+def chain_hash(prev: bytes, chunk: Iterable[int]) -> bytes:
+    """Stable digest of a prompt chunk conditioned on everything before it.
+
+    blake2b over the chunk's int64 token bytes, chained through ``prev``
+    (the previous chunk's digest, or ``EMPTY_PREFIX``).  Deliberately NOT
+    the builtin ``hash()``: that is salted per process by PYTHONHASHSEED,
+    so its keys are irreproducible across runs — this digest makes prefix
+    keys stable for warm-bench comparisons and any future cross-process
+    page sharing."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    # little-endian pinned: the digest must not vary with host byte order
+    h.update(np.asarray([int(t) for t in chunk], dtype="<i8").tobytes())
+    return h.digest()
+
+
+def chunk_hashes(prompt, page_size: int) -> list[bytes]:
     """Chain hashes of every FULL page-sized chunk of ``prompt``."""
-    out, h = [], 0
+    out, h = [], EMPTY_PREFIX
     for c in range(len(prompt) // page_size):
         h = chain_hash(h, prompt[c * page_size : (c + 1) * page_size])
         out.append(h)
@@ -43,18 +61,18 @@ class PrefixCache:
     """chain-hash → page-id map with an LRU of reclaimable pages."""
 
     def __init__(self):
-        self.by_hash: dict[int, int] = {}
-        self.hash_of: dict[int, int] = {}
+        self.by_hash: dict[bytes, int] = {}
+        self.hash_of: dict[int, bytes] = {}
         self.reclaimable: OrderedDict[int, None] = OrderedDict()
         self.hits = 0
         self.misses = 0
 
-    def peek(self, h: int) -> Optional[int]:
+    def peek(self, h: bytes) -> Optional[int]:
         """Non-mutating probe: page holding this chunk, or None.  Use for
         admission planning — no stats, no LRU movement."""
         return self.by_hash.get(h)
 
-    def lookup(self, h: int) -> Optional[int]:
+    def lookup(self, h: bytes) -> Optional[int]:
         """Page holding this chunk, or None.  Revives reclaimable pages
         (caller must take a PagePool reference via ``PagePool.revive`` /
         ``PagePool.ref``).  Call only when committing to use the page."""
@@ -66,7 +84,7 @@ class PrefixCache:
             self.reclaimable.pop(pid, None)  # back in active use
         return pid
 
-    def register(self, h: int, pid: int) -> None:
+    def register(self, h: bytes, pid: int) -> None:
         assert pid != NULL_PAGE
         # A racing identical registration keeps the earlier page.
         if h not in self.by_hash and pid not in self.hash_of:

@@ -315,6 +315,80 @@ def test_chunk_hash_is_prefix_conditioned():
     assert a[1] != b[1]
 
 
+def test_chunk_hash_is_process_stable():
+    """Prefix keys must be reproducible across processes: a blake2b chain
+    over token bytes, NOT the builtin hash() (which PYTHONHASHSEED salts
+    per process, breaking warm-bench comparisons and any cross-process
+    sharing).  Pinned digests = the cross-process contract."""
+    got = chunk_hashes(np.arange(8, dtype=np.int64), 4)
+    assert [h.hex() for h in got] == [
+        "61abbbbadcb5a29f38974c1405255595",
+        "ceb7796f6f9059e045e6ec8c7df2e484",
+    ]
+    # int dtype of the prompt must not change the key (engine uses int64,
+    # requests arrive int32)
+    assert chunk_hashes(np.arange(8, dtype=np.int32), 4) == got
+    assert chunk_hashes(list(range(8)), 4) == got
+
+
+def test_prefix_hit_rate_counts_cacheable_pages_only():
+    """Regression: a 100%-warm resubmission of a 17-token prompt at
+    page_size=16 must report a 100% hit rate — the trailing partial page
+    (never cacheable by design) used to be charged as a miss, reporting
+    50%."""
+    api, params = _api_params("bf16")
+    eng = PagedEngine(api, params, n_slots=1, max_len=32, page_size=16, n_pages=8)
+    prompt = _prompts((17,))[0]
+    _run(eng, [prompt], 2)  # cold: the one full page is a genuine miss
+    assert (eng.stats["prefix_hits"], eng.stats["prefix_misses"]) == (0, 1)
+    eng.submit(Request(rid=1, prompt=prompt, max_new=2))
+    eng.run_to_completion()  # warm: full page hits, partial page uncounted
+    assert (eng.stats["prefix_hits"], eng.stats["prefix_misses"]) == (1, 1)
+
+
+def test_prefix_hit_rate_chunked_trimmed_hit_not_a_miss():
+    """Chunked mode trims the final full-page hit of a page-aligned
+    prompt (to keep last-position logits) — that deliberate trim must not
+    count as a miss on a warm resubmission."""
+    api, params = _api_params("bf16")
+    eng = PagedEngine(
+        api, params, n_slots=1, max_len=MAX_LEN, page_size=PS,
+        chunked_prefill=True, prefill_chunk=PS,
+    )
+    prompt = _prompts((2 * PS,))[0]  # exactly 2 full pages
+    _run(eng, [prompt], 2)
+    # cacheable = (plen-1)//ps = 1 (the final page is the trimmed one)
+    assert (eng.stats["prefix_hits"], eng.stats["prefix_misses"]) == (0, 1)
+    eng.submit(Request(rid=1, prompt=prompt, max_new=2))
+    eng.run_to_completion()
+    assert (eng.stats["prefix_hits"], eng.stats["prefix_misses"]) == (1, 1)
+
+
+# ------------------------------------------------------ submit-time validation
+def test_oversized_prompt_rejected_at_submit_cannot_dos_the_batch():
+    """Regression: PromptTooLongError used to escape step() mid-flight,
+    abandoning every other in-flight request.  submit() now rejects the
+    bad request into ``finished`` with an error marker and the rest of
+    the batch completes token-exactly."""
+    api, params = _api_params("bf16")
+    good = _prompts((5, 9))
+    ref, _ = _run(
+        PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS), good, 3
+    )
+
+    eng = PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    bad = Request(rid=99, prompt=_prompts((MAX_LEN,))[0], max_new=3)
+    eng.submit(Request(rid=0, prompt=good[0], max_new=3))
+    eng.submit(bad)  # rejected immediately — never enters the queue
+    eng.submit(Request(rid=1, prompt=good[1], max_new=3))
+    finished, _ = eng.run_to_completion()
+
+    assert bad in finished and bad.error is not None and bad.out == []
+    assert "chunked_prefill" in bad.error  # actionable message
+    got = {r.rid: r.out for r in finished if r.error is None}
+    assert got == ref  # surrounding requests unharmed, token-exact
+
+
 # ------------------------------------------------- bucketed contiguous reads
 def test_kv_bucketed_decode_matches_full_read():
     """greedy_generate(kv_bucket=8) — bounded cache dequantization — is

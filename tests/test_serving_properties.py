@@ -105,6 +105,25 @@ class PoolPrefixMachine(RuleBasedStateMachine):
         self.pool.release(victim)
         self.parked.discard(victim)
 
+    @precondition(lambda self: self.active)
+    @rule(data=st.data())
+    def fork_refs(self, data):
+        """Sequence fork (engine._start_decode): every live page of the
+        parent's block table gains ONE reference per new sibling — pages
+        become multi-owner and every invariant (conservation law
+        included) must keep holding while siblings later deref
+        independently via the existing rules."""
+        pids = data.draw(st.lists(
+            st.sampled_from(sorted(self.active)), min_size=1, max_size=4,
+            unique=True,
+        ))
+        n_new_siblings = data.draw(st.integers(min_value=1, max_value=3))
+        for pid in pids:
+            before = self.pool.refcount[pid]
+            for _ in range(n_new_siblings):
+                self.pool.ref(pid)
+            assert self.pool.refcount[pid] == before + n_new_siblings
+
     @precondition(lambda self: any(self.prefix.knows(p) for p in self.active))
     @rule(data=st.data())
     def forget_active(self, data):
