@@ -1,42 +1,46 @@
-"""Paged vs contiguous serving: tokens/s, cache-HBM-bytes per decode step,
-and chunked-prefill prefix-hit compute savings.
+"""Paged vs contiguous serving: warm tokens/s, per-tick latency split,
+trace counts, cache-HBM bytes per decode step, and chunked-prefill
+prefix-hit compute savings.
 
 The contiguous engine dequantizes the ENTIRE max-length KV cache of every
 slot on every decode tick; the paged engine gathers only the pages each
-sequence actually references through its block table.  This benchmark runs
-both engines on the same request mix (with shared prompt prefixes so prefix
-caching engages) across all three cache kinds and reports:
+sequence actually references through its block table — and with the
+live-page grid kernels the NULL table padding moves zero HBM bytes too.
+Every pass below runs AFTER a warmup pass that compiles every serving
+shape bucket on throwaway engines (the jitted step functions are shared
+per ModelAPI), so the reported wall-clock measures serving, not tracing;
+compile time is its own column.
 
-* wall-clock tokens/s (CPU emulation — directional only),
-* decode ticks (paged fuses mixed-depth slots into one step),
-* analytic cache-HBM-bytes read per decode step (exact from shapes: the
-  contiguous path reads B·max_len token-slots; the paged path reads
-  ceil(len/ps)·ps live token-slots per sequence),
-* pool pages held vs contiguous slot footprint (prefix sharing included),
+Columns (per cache kind, in ``BENCH_paged.json``):
 
-and, for the chunked-prefill engine (PagedEngine(chunked_prefill=True)):
-
-* token-for-token match with the full-prefill paged engine,
-* a WARM pass re-submitting the same prompts against the now-populated
-  prefix cache: prefill query tokens actually run (the uncached suffix
-  only — on a full-page prefix hit the engine performs ZERO attention
-  FLOPs over the cached pages, verified here as `warm_prefill_tokens`
-  == the sum of prompt tails), and the prefill-token reduction
-  cold/warm (the deterministic compute-saving ratio; wall-clock on CPU
-  is dominated by jit compilation of the cold pass, so it is reported
-  but not headline),
-* analytic prefill compute/bytes saved by the hits: GEMM FLOPs
-  (2·weights·tokens_skipped), attention FLOPs (4·H·D·Σ context per
-  skipped query), and the KV-page HBM bytes neither recomputed nor
-  rewritten,
-
-and a SEQUENCE-FORKING pass: one prompt forked best-of-n ways
-(``Request(n_samples=n)`` — prompt pages shared by refcount, divergent
-tail pages copy-on-write) against the n-independent-requests baseline,
-reporting pages-per-sibling both ways, COW copy counts, and the analytic
-HBM page bytes the fork never materialized.
-
-Everything lands in ``BENCH_paged.json`` (CI artifact).
+* ``match`` / ``match_chunked`` — token-for-token equivalence of the
+  paged and chunked engines with the contiguous reference,
+* ``tok_s_contig`` / ``tok_s_paged`` / ``tok_s_chunked`` — warm-compile,
+  cold-prefix wall-clock tokens/s (CPU emulation — directional only),
+* ``tok_s_paged_warm`` / ``tok_s_chunked_warm`` — the same workload
+  resubmitted against the populated prefix cache (best-of-3 reps): the
+  chunked engine skips ALL prefill compute over prefix-hit pages, the
+  non-chunked engine re-runs full prefill (hits only save page writes) —
+  the acceptance bar is chunked_warm ≥ 0.9·paged_warm (the 0.9 absorbs
+  CPU scheduler jitter; the token-skip itself is asserted exactly),
+* ``t_compile_warmup_s`` — wall-clock of the warmup pass (trace/compile
+  dominated); ``traces_warmup`` / ``traces_timed`` — jit trace counts per
+  step function during warmup vs the timed passes (timed must be 0:
+  shape buckets, not shapes-per-request),
+* ``prefill_launch_ms`` / ``decode_tick_ms`` — per-tick latency split
+  (prefill launches vs fused decode ticks) for the chunked engine;
+  ``prefill_launches`` counts ONE batched launch per tick regardless of
+  how many slots are prefilling,
+* ``contig_bytes`` / ``paged_bytes`` — analytic cache-HBM bytes read per
+  decode step (contiguous reads B·max_len token-slots; the live-page
+  grid reads ceil(len/ps)·ps live slots per sequence),
+* ``masked_grid_bytes`` / ``null_page_bytes_skipped`` — what the old
+  (B, MAXP) masked-DMA grid would have read, and the bytes the live-page
+  schedule skips (NULL-page DMAs elided),
+* ``cold/warm_prefill_tokens`` + ``prefill_*_saved`` — prefix-hit
+  prefill compute/bytes savings (analytic; zero attention FLOPs run
+  over cached pages),
+* ``fork_*`` — best-of-n page sharing vs n independent requests.
 
   PYTHONPATH=src python benchmarks/paged_bench.py --gen 12 --page-size 8
 """
@@ -125,22 +129,61 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     api = zoo.build(cfg, rt)
     params = api.init(jax.random.PRNGKey(0))
     params["codebooks"] = cb
-    rng = np.random.default_rng(0)
     max_len = args.max_len
     ps = args.page_size
+    chunk = args.prefill_chunk or 2 * ps
     bcq_cfg = rt.bcq_cfg
 
+    def fresh_reqs(offset=0):
+        rng = np.random.default_rng(0)
+        return [
+            Request(rid=offset + r.rid, prompt=r.prompt, max_new=r.max_new)
+            for r in requests_for(cfg, args.gen, rng)
+        ]
+
+    def mk_paged(**kw):
+        # profile_sync: block on every prefill launch so the t_prefill_s /
+        # t_decode_s split attributes device time exactly (bench-only mode;
+        # production engines keep host/device overlap)
+        return PagedEngine(
+            api, params, n_slots=args.slots, max_len=max_len, page_size=ps,
+            profile_sync=True, **kw
+        )
+
+    def timed_submit(engine, batch_reqs):
+        t0 = time.perf_counter()
+        for r in batch_reqs:
+            engine.submit(r)
+        engine.run_to_completion()
+        return time.perf_counter() - t0
+
+    # ---- WARMUP: compile every serving shape bucket on throwaway engines
+    # (the jitted step functions are shared per ModelAPI, so this warms the
+    # timed engines below).  Wall-clock here is the compile column — the
+    # previously-reported "cold" 95× gap was this tracing, not serving.
+    t0 = time.perf_counter()
+    for warm_eng in (
+        ContinuousBatcher(api, params, n_slots=args.slots, max_len=max_len),
+        mk_paged(),
+        mk_paged(chunked_prefill=True, prefill_chunk=chunk),
+    ):
+        for r in fresh_reqs():
+            warm_eng.submit(r)
+        warm_eng.run_to_completion()
+    traces_warmup = warm_eng.trace_counts()  # chunked engine saw them all
+    t_compile = time.perf_counter() - t0
+
+    # ---- timed passes (warm compile, cold prefix) -----------------------
     t0 = time.perf_counter()
     cbat = ContinuousBatcher(api, params, n_slots=args.slots, max_len=max_len)
-    for r in requests_for(cfg, args.gen, rng):
-        cbat.submit(Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new))
+    for r in fresh_reqs():
+        cbat.submit(r)
     fin_c, ticks_c = cbat.run_to_completion()
     t_contig = time.perf_counter() - t0
 
-    rng = np.random.default_rng(0)
+    eng = mk_paged()
+    reqs = fresh_reqs()
     t0 = time.perf_counter()
-    eng = PagedEngine(api, params, n_slots=args.slots, max_len=max_len, page_size=ps)
-    reqs = requests_for(cfg, args.gen, rng)
     for r in reqs:
         eng.submit(r)
     fin_p, ticks_p = eng.run_to_completion()
@@ -149,16 +192,28 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     out_c = {r.rid: r.out for r in fin_c}
     out_p = {r.rid: r.out for r in fin_p}
     match = all(out_c[rid] == out_p[rid] for rid in out_c)
+    # snapshot NOW: fin_p aliases eng.finished and eng.stats keeps
+    # accumulating through the warm resubmission reps below — every timed
+    # pass serves this same workload, so one count divides every
+    # wall-clock, and the hit/page columns must describe the COLD pass
+    toks = sum(len(r.out) for r in fin_p)
+    cold_prefix_hits = eng.stats["prefix_hits"]
+    cold_peak_pages = eng.stats["peak_pages"]
+
+    # warm resubmission on the NON-chunked engine: prefix hits save page
+    # writes but full-prompt prefill compute still runs per request.
+    # Best-of-3 reps: the warm passes are tiny on CPU and scheduler jitter
+    # otherwise dominates the chunked-vs-paged comparison.
+    t_paged_warm = min(
+        timed_submit(eng, fresh_reqs(offset=200 + 10 * k)) for k in range(3)
+    )
+    traces_paged = eng.trace_counts()
 
     # ---- chunked prefill: COLD pass (empty prefix cache), then WARM pass
     # re-submitting the same prompts against the kept engine — prefix hits
     # now skip whole pages of prefill compute, not just page memory.
-    rng = np.random.default_rng(0)
-    eng_ck = PagedEngine(
-        api, params, n_slots=args.slots, max_len=max_len, page_size=ps,
-        chunked_prefill=True, prefill_chunk=args.prefill_chunk or 2 * ps,
-    )
-    reqs_ck = requests_for(cfg, args.gen, rng)
+    eng_ck = mk_paged(chunked_prefill=True, prefill_chunk=chunk)
+    reqs_ck = fresh_reqs()
     t0 = time.perf_counter()
     for r in reqs_ck:
         eng_ck.submit(r)
@@ -168,14 +223,16 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     match_ck = all(out_p[rid] == out_ck[rid] for rid in out_p)
     cold_prefill_tokens = eng_ck.stats["prefill_tokens"]
 
-    rng = np.random.default_rng(0)
-    warm_reqs = requests_for(cfg, args.gen, rng)
-    t0 = time.perf_counter()
-    for r in warm_reqs:
-        eng_ck.submit(Request(rid=100 + r.rid, prompt=r.prompt, max_new=r.max_new))
-    fin_w, _ = eng_ck.run_to_completion()
-    t_warm = time.perf_counter() - t0
+    warm_reqs = fresh_reqs(offset=100)
+    t_warm = timed_submit(eng_ck, warm_reqs)
+    # prefill-token accounting comes from the FIRST warm rep; the extra
+    # best-of-3 reps below are purely to de-noise the wall-clock
     warm_prefill_tokens = eng_ck.stats["prefill_tokens"] - cold_prefill_tokens
+    t_warm = min(
+        t_warm,
+        *(timed_submit(eng_ck, fresh_reqs(offset=110 + 10 * k)) for k in range(2)),
+    )
+    traces_chunked = eng_ck.trace_counts()
     # every full page of every prompt is now cached → the warm pass runs
     # prefill (and its attention) over ONLY the uncached tails: zero
     # attention FLOPs issue over the prefix-hit pages
@@ -184,9 +241,14 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     )
     skipped_per_req = [(len(r.prompt) - 1) // ps * ps for r in warm_reqs]
 
+    # per-tick latency split over the chunked engine's full run
+    launches = max(eng_ck.stats["prefill_launches"], 1)
+    dticks = max(eng_ck.stats["decode_ticks"], 1)
+
     # ---- sequence forking: ONE prompt forked n ways (prompt pages shared
     # by refcount, divergent tails COW) vs the n-independent-requests
     # baseline that prefills and stores every page n times.
+    rng = np.random.default_rng(7)
     n_fork = 3
     fork_prompt = rng.integers(0, cfg.vocab, size=2 * ps + ps // 2).astype(np.int32)
     eng_fork = PagedEngine(api, params, n_slots=n_fork, max_len=max_len, page_size=ps)
@@ -209,7 +271,9 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     mean_live = np.mean([len(r.prompt) + r.max_new // 2 for r in reqs])
     contig_bytes = args.slots * max_len * tsb * cfg.n_layers
     paged_bytes = args.slots * (np.ceil(mean_live / ps) * ps) * tsb * cfg.n_layers
-    toks = sum(len(r.out) for r in fin_p)
+    # the old (B, MAXP) grid DMA'd every table slot (NULL padding included)
+    # every decode step; the live-page schedule elides those DMAs
+    masked_grid_bytes = args.slots * (max_len // ps) * ps * tsb * cfg.n_layers
     row = {
         "kind": kind,
         "match": match,
@@ -217,20 +281,33 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         "tok_s_contig": toks / t_contig,
         "tok_s_paged": toks / t_paged,
         "tok_s_chunked": toks / t_chunked,
+        "tok_s_paged_warm": toks / t_paged_warm,
+        "tok_s_chunked_warm": toks / t_warm,
+        "t_compile_warmup_s": t_compile,
+        "traces_warmup": traces_warmup,
+        "traces_timed": {
+            "paged": traces_paged, "chunked": traces_chunked,
+        },
+        "prefill_launch_ms": 1e3 * eng_ck.stats["t_prefill_s"] / launches,
+        "decode_tick_ms": 1e3 * eng_ck.stats["t_decode_s"] / dticks,
+        "prefill_launches": eng_ck.stats["prefill_launches"],
+        "prefill_chunks": eng_ck.stats["prefill_chunks"],
         "ticks_contig": ticks_c,
         "ticks_paged": ticks_p,
         "ticks_chunked": ticks_ck,
         "contig_bytes": contig_bytes,
         "paged_bytes": paged_bytes,
-        "prefix_hits": eng.stats["prefix_hits"],
-        "peak_pages": eng.stats["peak_pages"],
+        "masked_grid_bytes": masked_grid_bytes,
+        "null_page_bytes_skipped": masked_grid_bytes - paged_bytes,
+        "prefix_hits": cold_prefix_hits,
+        "peak_pages": cold_peak_pages,
         "contig_slots_pages": args.slots * (max_len // ps),
         "cold_prefill_tokens": cold_prefill_tokens,
         "warm_prefill_tokens": warm_prefill_tokens,
         "warm_prefill_tokens_expected": expected_warm,
         "warm_prefill_tokens_skipped": sum(skipped_per_req),
         # deterministic compute-saving ratio (prefill query tokens run);
-        # wall-clock warm/cold on CPU mostly measures jit compilation
+        # wall-clock cold/warm now excludes compile (warmup pass above)
         "prefill_token_reduction": cold_prefill_tokens / max(warm_prefill_tokens, 1),
         "t_warm_wallclock_s": t_warm,
         "t_cold_wallclock_s": t_chunked,
@@ -267,9 +344,9 @@ def bench(args) -> bool:
     )
     hdr = (
         f"{'cache':6s} {'match':5s} {'tok/s ctg':>10s} {'tok/s pgd':>10s} "
-        f"{'tok/s ck':>9s} {'ticks':>14s} {'HBM B/step ctg':>15s} "
-        f"{'HBM B/step pgd':>15s} {'saving':>7s} {'pages':>9s} "
-        f"{'prefill warm/cold':>18s} {'hit ÷tokens':>12s}"
+        f"{'tok/s ck':>9s} {'warm pgd':>9s} {'warm ck':>8s} {'compile':>8s} "
+        f"{'ticks':>14s} {'HBM B/step pgd':>15s} {'NULL B skip':>12s} "
+        f"{'prefill warm/cold':>18s}"
     )
     print(hdr)
     ok = True
@@ -277,14 +354,25 @@ def bench(args) -> bool:
     for kind in ("bf16", "int8", "bcq4"):
         r = run_kind(cfg, kind, cb, args)
         rows.append(r)
-        saving = 1.0 - r["paged_bytes"] / r["contig_bytes"]
         zero_flops_over_hits = (
             r["warm_prefill_tokens"] == r["warm_prefill_tokens_expected"]
+        )
+        timed_traces = sum(
+            sum(v.values()) for v in r["traces_timed"].values()
         )
         ok &= (
             r["match"] and r["match_chunked"]
             and r["paged_bytes"] < r["contig_bytes"]
+            and r["null_page_bytes_skipped"] >= 0
             and zero_flops_over_hits
+            # warm serving: chunked (prefix hits skip prefill compute)
+            # must not lose to re-prefilling everything.  Both sides are
+            # best-of-3 wall-clock; the 0.9 factor absorbs residual CPU
+            # scheduler jitter on these sub-100ms passes (the structural
+            # win — prefill tokens skipped — is asserted exactly above)
+            and r["tok_s_chunked_warm"] >= 0.9 * r["tok_s_paged_warm"]
+            # shape buckets hold: the timed passes never retrace
+            and timed_traces == 0
             # forking must beat n independent requests on pages/sibling
             and r["fork_pages_per_sibling"] < r["fork_baseline_pages_per_sibling"]
         )
@@ -292,11 +380,18 @@ def bench(args) -> bool:
             f"{r['kind']:6s} {str(r['match'] and r['match_chunked']):5s} "
             f"{r['tok_s_contig']:10.1f} {r['tok_s_paged']:10.1f} "
             f"{r['tok_s_chunked']:9.1f} "
+            f"{r['tok_s_paged_warm']:9.1f} {r['tok_s_chunked_warm']:8.1f} "
+            f"{r['t_compile_warmup_s']:7.1f}s "
             f"{r['ticks_contig']:4d}/{r['ticks_paged']:<4d}/{r['ticks_chunked']:<4d} "
-            f"{r['contig_bytes']:15,.0f} {r['paged_bytes']:15,.0f} {saving:6.1%} "
-            f"{r['peak_pages']:3d}/{r['contig_slots_pages']:<3d} "
-            f"{r['warm_prefill_tokens']:8d}/{r['cold_prefill_tokens']:<8d} "
-            f"{r['prefill_token_reduction']:11.2f}x"
+            f"{r['paged_bytes']:15,.0f} {r['null_page_bytes_skipped']:12,.0f} "
+            f"{r['warm_prefill_tokens']:8d}/{r['cold_prefill_tokens']:<8d}"
+        )
+        print(
+            f"{'':6s} per-tick split (chunked): prefill launch "
+            f"{r['prefill_launch_ms']:.1f} ms × {r['prefill_launches']} "
+            f"launches ({r['prefill_chunks']} chunks batched), decode tick "
+            f"{r['decode_tick_ms']:.1f} ms; timed-pass retraces: {timed_traces} "
+            f"(warmup paid {sum(r['traces_warmup'].values())})"
         )
         print(
             f"{'':6s} prefix-hit savings (warm pass, analytic): "
@@ -326,12 +421,12 @@ def bench(args) -> bool:
     with open("BENCH_paged.json", "w") as f:
         json.dump(report, f, indent=1, default=float)
     print(
-        "\npaged path reads only live pages per decode step "
-        "(contiguous dequantizes the full max-length cache of every slot); "
+        "\npaged path reads only live pages per decode step (the live-page "
+        "grid elides NULL-padding DMAs the old masked grid paid for); "
         "prefix caching shares full prompt pages across requests, and "
         "chunked prefill additionally skips ALL prefill compute over "
-        "prefix-hit pages (the warm pass runs only the uncached tails).  "
-        "Wrote BENCH_paged.json."
+        "prefix-hit pages — one batched chunk launch per tick, shapes "
+        "bucketed so warm serving never retraces.  Wrote BENCH_paged.json."
     )
     return ok
 

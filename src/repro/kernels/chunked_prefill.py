@@ -1,27 +1,22 @@
 """Pallas TPU chunked-prefill attention kernel (paged prefix, causal chunk).
 
 Prefill attention for ONE query chunk of a prompt whose earlier tokens
-already live in KV pages: the chunk's queries attend to every page the
-sequence references through its scalar-prefetched block table — the
-prefix-hit pages written by *other* requests, and the chunk's own
-freshly-written pages — with quantized pages (int8 / packed-BCQ4)
-dequantized **in-kernel** in VMEM, exactly like the decode kernel
-(kernels/paged_attention.py).  The causal structure falls out of absolute
-positions: query c of the chunk sits at position ``n_past + c`` and may
-see page token t iff ``t <= n_past + c``; prefix tokens (t < n_past) are
-visible to the whole chunk, chunk tokens mask causally, and garbage past
-the written tail is invisible.
+already live in KV pages — now a thin wrapper over the shared page-gather
+core (``kernels.common.page_gather_attention`` — DESIGN lives there).  The
+chunk's queries attend to every page the sequence references through its
+scalar-prefetched block table — prefix-hit pages written by *other*
+requests included — with quantized pages dequantized **in-kernel** (bcq4
+via the one-hot·codebook MXU matmul) and a **live-page-only grid**:
+sequence b contributes ``ceil((n_past+C)/ps)`` steps, so NULL table
+padding and absent sequences move zero HBM bytes.
 
+The causal structure falls out of absolute positions: query c of the
+chunk sits at position ``n_past + c`` and may see page token t iff
+``t <= n_past + c`` — prefix tokens are visible to the whole chunk, chunk
+tokens mask causally, and garbage past the written tail is invisible.
 This is the compute half of prefix caching: the engine never re-runs the
 transformer over prefix-hit tokens, and this kernel lets the uncached
 suffix attend to the shared pages without dequantizing them to HBM first.
-HBM reads per chunk are the live packed pages (≈4.7 bits/scalar for BCQ4)
-plus the (C, H, D) chunk queries — never a max-length slab.
-
-Schedule: grid (B, MAXP); per (sequence, page) step an online-softmax
-update over the page's ``page_size`` tokens for all C queries at once
-(running max m (H, C), normalizer l (H, C), accumulator acc (H, C, D) in
-VMEM scratch); the (C, H, D) output is written on the last page.
 
 Validated in interpret mode against ``kernels.ref.chunked_prefill_ref``
 (tests/test_chunked_prefill.py); on TPU this is the drop-in chunk
@@ -29,66 +24,12 @@ attention for PagedEngine(chunked_prefill=True) with Runtime.paged_kernel.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
 from repro.core.bcq import BCQConfig
-from repro.kernels.paged_attention import NEG, _dequant_page
+from repro.kernels.common import page_gather_attention
 
-
-def _chunked_kernel(bt_ref, len_ref, *args, kind, cfg, ps, rep, scale, nq):
-    nk = {"bf16": 1, "int8": 2, "bcq4": 3}[kind]
-    q_ref = args[0]
-    k_refs = args[1 : 1 + nk]
-    v_refs = args[1 + nk : 1 + 2 * nk]
-    extra = args[1 + 2 * nk :]
-    if kind == "bcq4":
-        sx_ref, cb_ref = extra[0], extra[1]
-        o_ref, m_ref, l_ref, acc_ref = extra[2], extra[3], extra[4], extra[5]
-        k_sx, v_sx = sx_ref[0, 0], sx_ref[0, 1]
-    else:
-        cb_ref, k_sx, v_sx = None, None, None
-        o_ref, m_ref, l_ref, acc_ref = extra[0], extra[1], extra[2], extra[3]
-
-    b = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0].astype(jnp.float32)  # (C, H, D)
-    kf = _dequant_page(kind, k_refs, cfg, cb_ref, k_sx)  # (ps, Hkv, D)
-    vf = _dequant_page(kind, v_refs, cfg, cb_ref, v_sx)
-    if rep > 1:
-        kf = jnp.repeat(kf, rep, axis=1)
-        vf = jnp.repeat(vf, rep, axis=1)
-
-    s = jnp.einsum("chd,thd->hct", q, kf) * scale  # (H, C, ps)
-    # query c sits at absolute position len_ref[b] + c; page token t sits at
-    # absolute position j·ps + t.  One mask gives causality AND hides both
-    # the unwritten tail of the chunk's last page and all-NULL padding pages.
-    tpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, nq, ps), 2)
-    qpos = len_ref[b] + jax.lax.broadcasted_iota(jnp.int32, (1, nq, ps), 1)
-    s = jnp.where(tpos <= qpos, s, NEG)
-
-    m_prev = m_ref[...]  # (H, C)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
-    p = jnp.exp(s - m_new[..., None])
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2)
-    acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum("hct,thd->hcd", p, vf)
-    m_ref[...] = m_new
-
-    @pl.when(j == pl.num_programs(1) - 1)
-    def _done():
-        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]  # (H, C, D)
-        o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+__all__ = ["chunked_prefill"]
 
 
 def chunked_prefill(
@@ -109,67 +50,7 @@ def chunked_prefill(
     chunk (query c is at absolute position n_past[b] + c; the sequence
     must reference ≥ n_past + C written tokens through its table).
     Returns (B, C, H, D) f32."""
-    import jax.experimental.pallas.tpu as pltpu
-    import dataclasses as _dc
-
-    from repro.kernels.common import resolve_interpret
-
-    b, nq, h, d = q.shape
-    interpret = resolve_interpret(interpret)
-    maxp = block_tables.shape[1]
-
-    def page_spec(leaf):
-        blk = (1,) + leaf.shape[1:]
-        nd = leaf.ndim
-        return pl.BlockSpec(blk, lambda bb, jj, bt, ln, _nd=nd: (bt[bb, jj],) + (0,) * (_nd - 1))
-
-    if kind == "bf16":
-        k_leaves, v_leaves = [pool["k"]], [pool["v"]]
-    elif kind == "int8":
-        k_leaves = [pool["k"], pool["k_scale"]]
-        v_leaves = [pool["v"], pool["v_scale"]]
-    elif kind == "bcq4":
-        # per-head-vector cache quantization shrinks L_A to d_head when needed
-        if d % cfg.array_len:
-            la = min(cfg.array_len, d)
-            cfg = _dc.replace(cfg, array_len=la)
-        k_leaves = [pool["k_idx"], pool["k_sel"], pool["k_scale"]]
-        v_leaves = [pool["v_idx"], pool["v_sel"], pool["v_scale"]]
-    else:
-        raise ValueError(kind)
-    ps = k_leaves[0].shape[1]
-    hkv = k_leaves[0].shape[2]
-    rep = h // hkv
-
-    inputs = [q] + k_leaves + v_leaves
-    in_specs = [pl.BlockSpec((1, nq, h, d), lambda bb, jj, bt, ln: (bb, 0, 0, 0))]
-    in_specs += [page_spec(leaf) for leaf in k_leaves + v_leaves]
-    if kind == "bcq4":
-        sx = jnp.stack([pool["k_sx"], pool["v_sx"]]).reshape(1, 2).astype(jnp.float32)
-        cbm = cb.astype(jnp.float32)
-        inputs += [sx, cbm]
-        in_specs += [
-            pl.BlockSpec((1, 2), lambda bb, jj, bt, ln: (0, 0)),
-            pl.BlockSpec(cbm.shape, lambda bb, jj, bt, ln: (0, 0)),
-        ]
-
-    kernel = functools.partial(
-        _chunked_kernel, kind=kind, cfg=cfg, ps=ps, rep=rep, scale=d**-0.5, nq=nq
+    kv_len = n_past.astype("int32") + q.shape[1]
+    return page_gather_attention(
+        q, pool, block_tables, kv_len, kind, cfg, cb, interpret
     )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, maxp),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, nq, h, d), lambda bb, jj, bt, ln: (bb, 0, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((h, nq), jnp.float32),
-            pltpu.VMEM((h, nq), jnp.float32),
-            pltpu.VMEM((h, nq, d), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, nq, h, d), jnp.float32),
-        interpret=interpret,
-    )(block_tables.astype(jnp.int32), n_past.astype(jnp.int32), *inputs)

@@ -10,14 +10,68 @@ Single home for the pieces that used to be copy-pasted across
   used by both the standalone quantize kernel and the fused linear kernel —
   sharing the code is what makes the two paths bit-exact by construction,
 * the one-hot → codebook ``dot_general`` decode (``onehot_decode``) that
-  turns per-scalar codeword lookup into MXU work (see bcq_linear.py DESIGN).
+  turns per-scalar codeword lookup into MXU work (see bcq_linear.py DESIGN),
+* the **page-gather attention core** (``page_gather_attention``) shared by
+  the paged decode kernel (kernels/paged_attention.py) and the chunked
+  prefill kernel (kernels/chunked_prefill.py) — DESIGN below.
+
+PAGE-GATHER CORE DESIGN
+=======================
+
+One kernel serves both paged attention shapes: decode is the C == 1 case of
+a chunk (a decode query at position ``len-1`` sees exactly the tokens a
+chunk query at ``qpos = kv_len - C + c`` does under the single mask
+``tpos <= qpos``).  Three hot-path properties:
+
+1. **Live-page-only grid.**  The old kernels ran grid ``(B, MAXP)`` —
+   every table slot of every sequence, NULL padding included, each step
+   DMA-ing a page and masking it dead.  The core instead runs a FLAT grid
+   of ``B·MAXP`` steps over a scalar-prefetched *schedule*: per sequence
+   ``ceil(kv_len/ps)`` live steps (min 1, so every output row is written),
+   concatenated; steps past the live total replay the last live step's
+   block indices.  Pallas/Mosaic elides the DMA whenever consecutive grid
+   steps map a block to the same index, so dead steps move **zero** page
+   bytes and the HBM traffic is exactly the live pages — the
+   ``null_page_bytes_skipped`` column of BENCH_paged.json.  Schedule
+   arrays (``sid``/``pin``/``first``/``last``/``live``, one int32 per
+   step) ride in scalar memory via ``PrefetchScalarGridSpec``.
+
+2. **MXU one-hot dequant for bcq4 pages.**  Per-scalar codeword lookup
+   ``cb[sel·2^B + idx]`` runs as ``onehot_decode`` — one
+   ``(ps·Hkv, d)``-row one-hot · flattened-codebook ``dot_general`` on the
+   MXU instead of a VPU flat-gather, exactly like the fused linear kernel
+   (bcq_linear.py DESIGN).  The one-hot matmul is an *exact* lookup (one
+   1.0 per row, exact 0.0 elsewhere), so the dequantized page is
+   bit-identical to the reference gather.
+
+3. **Repeat-free GQA.**  q reshapes to ``(C, Hkv, rep, D)`` and the score
+   / accumulate einsums batch over the Hkv groups — the old
+   ``jnp.repeat(kf, rep, axis=1)`` materialized the K and V pages
+   ``rep``× in VMEM for nothing.
+
+VMEM per step (f32): q block C·H·D·4, one K + one V page (packed bytes by
+kind), scratch m/l 2·H·C·4 + acc H·C·D·4, one-hot transient ≤
+``_ONEHOT_PASS_BYTES``.  For serving shapes (C ≤ 64, H ≤ 32, D ≤ 128,
+ps ≤ 64) that is well under 2 MiB — far inside the ~16 MiB envelope.
+
+Shape-bucketing policy (serving layer, see serving/engine.py): chunk
+length and prefill batch bucket to powers of two, block tables grow by
+doubling — so steady-state serving stops retracing; the kernels here are
+shape-polymorphic per bucket, not per request.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
-from repro.core.bcq import BCQConfig
+from repro.core.bcq import BCQConfig, unpack_nibbles
+from repro.core.formats import bits_to_e4m3_impl
+
+NEG = -1e30
 
 _E4M3_MAX = 448.0
 _E4M3_MIN_SUB = 2.0**-9
@@ -132,3 +186,227 @@ def onehot_decode(code: jax.Array, cb_flat: jax.Array) -> jax.Array:
         v = jax.lax.dot_general(oh, cb_flat, dnums, preferred_element_type=jnp.float32)
         chunks.append(v.reshape(rows, c))
     return chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=0)
+
+
+# ===================================================================== #
+#  Shared page-gather attention core (paged decode + chunked prefill)   #
+# ===================================================================== #
+
+_PAGE_NK = {"bf16": 1, "int8": 2, "bcq4": 3}
+
+
+def page_pool_leaves(pool: dict, kind: str) -> tuple[list, list]:
+    """The (k_leaves, v_leaves) of a single-layer page pool, in the order
+    the page-gather kernel consumes them."""
+    if kind == "bf16":
+        return [pool["k"]], [pool["v"]]
+    if kind == "int8":
+        return [pool["k"], pool["k_scale"]], [pool["v"], pool["v_scale"]]
+    if kind == "bcq4":
+        return (
+            [pool["k_idx"], pool["k_sel"], pool["k_scale"]],
+            [pool["v_idx"], pool["v_sel"], pool["v_scale"]],
+        )
+    raise ValueError(kind)
+
+
+def dequant_page(kind, refs, cfg: BCQConfig, cbf_ref, sx):
+    """Dequantize one page's K or V to f32 (ps, Hkv, D) inside the kernel.
+
+    bcq4 decodes via the one-hot·codebook MXU matmul (``onehot_decode``,
+    exact lookup — bit-identical to the reference flat-gather);
+    ``cbf_ref`` holds the flattened (N_c·2^B, 1) codebook."""
+    if kind == "bf16":
+        return refs[0][0].astype(jnp.float32)
+    if kind == "int8":
+        q = refs[0][0].astype(jnp.float32)  # (ps, Hkv, D)
+        s = refs[1][0]  # (ps, Hkv) f32
+        return q * s[..., None]
+    idx = unpack_nibbles(refs[0][0]).astype(jnp.int32)  # (ps, Hkv, D)
+    ps, hkv, d = idx.shape
+    nb = d // cfg.block_len
+    sel = unpack_nibbles(refs[1][0]).astype(jnp.int32)[..., :nb]
+    ratio = bits_to_e4m3_impl(refs[2][0])  # (ps, Hkv, na)
+    inv = jnp.where(ratio > 0, 1.0 / (ratio * sx), 0.0)
+    code = jnp.repeat(sel, cfg.block_len, -1) * cfg.n_entries + idx
+    vals = onehot_decode(code.reshape(ps * hkv, d), cbf_ref[...])
+    return vals.reshape(ps, hkv, d) * jnp.repeat(inv, cfg.array_len, -1)
+
+
+def page_schedule(kv_len: jax.Array, page_size: int, maxp: int):
+    """Flat live-page schedule for the page-gather grid.
+
+    kv_len: (B,) visible tokens per sequence.  Returns five (B·MAXP,)
+    int32 arrays — for flat step t: ``sid`` the sequence it serves,
+    ``pin`` the page index within that sequence, ``first``/``last``
+    whether t opens/closes its sequence's online softmax, ``live``
+    whether t does any work at all.  Sequence b gets
+    ``clip(ceil(kv_len/ps), 1, MAXP)`` consecutive steps (min 1 so its
+    output block is always written); steps beyond the live total replay
+    the last live step's indices, so every BlockSpec index map repeats
+    and the page DMAs for dead steps are elided."""
+    b = kv_len.shape[0]
+    g = b * maxp
+    counts = jnp.clip((kv_len + page_size - 1) // page_size, 1, maxp).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    total = starts[b]
+    t = jnp.arange(g, dtype=jnp.int32)
+    t_eff = jnp.minimum(t, total - 1)
+    sid = jnp.searchsorted(starts[1:], t_eff, side="right").astype(jnp.int32)
+    pin = t_eff - starts[sid]
+    live = (t < total).astype(jnp.int32)
+    first = ((pin == 0) & (t < total)).astype(jnp.int32)
+    last = ((pin == counts[sid] - 1) & (t < total)).astype(jnp.int32)
+    return sid, pin, first, last, live
+
+
+def _page_gather_kernel(
+    bt_ref, kvl_ref, sid_ref, pin_ref, first_ref, last_ref, live_ref,
+    *args, kind, cfg, ps, hkv, rep, scale, nq,
+):
+    nk = _PAGE_NK[kind]
+    q_ref = args[0]
+    k_refs = args[1 : 1 + nk]
+    v_refs = args[1 + nk : 1 + 2 * nk]
+    extra = args[1 + 2 * nk :]
+    if kind == "bcq4":
+        sx_ref, cbf_ref = extra[0], extra[1]
+        o_ref, m_ref, l_ref, acc_ref = extra[2], extra[3], extra[4], extra[5]
+        k_sx, v_sx = sx_ref[0, 0], sx_ref[0, 1]
+    else:
+        cbf_ref, k_sx, v_sx = None, None, None
+        o_ref, m_ref, l_ref, acc_ref = extra[0], extra[1], extra[2], extra[3]
+
+    t = pl.program_id(0)
+    b = sid_ref[t]
+    j = pin_ref[t]
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(live_ref[t] == 1)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)  # (C, H, D)
+        d = q.shape[-1]
+        qg = q.reshape(nq, hkv, rep, d)  # GQA: batch kv groups, never repeat K/V
+        kf = dequant_page(kind, k_refs, cfg, cbf_ref, k_sx)  # (ps, Hkv, D)
+        vf = dequant_page(kind, v_refs, cfg, cbf_ref, v_sx)
+
+        s = jnp.einsum("cgrd,tgd->grct", qg, kf) * scale  # (Hkv, rep, C, ps)
+        # query c sits at absolute position kv_len - C + c; page token u at
+        # j·ps + u.  One mask gives decode validity (C == 1), chunk
+        # causality, prefix visibility, and unwritten-tail hiding.
+        tpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, nq, ps), 3)
+        qpos = (kvl_ref[b] - nq) + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, nq, ps), 2
+        )
+        s = jnp.where(tpos <= qpos, s, NEG)
+
+        m_prev = m_ref[...].reshape(hkv, rep, nq)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=3))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_ref[...].reshape(hkv, rep, nq) * alpha + jnp.sum(p, axis=3)
+        acc = acc_ref[...].reshape(hkv, rep, nq, d)
+        acc = acc * alpha[..., None] + jnp.einsum("grct,tgd->grcd", p, vf)
+        m_ref[...] = m_new.reshape(hkv * rep, nq)
+        l_ref[...] = l_new.reshape(hkv * rep, nq)
+        acc_ref[...] = acc.reshape(hkv * rep, nq, d)
+
+    @pl.when(last_ref[t] == 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]  # (H, C, D)
+        o_ref[0] = out.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+def page_gather_attention(
+    q: jax.Array,
+    pool: dict,
+    block_tables: jax.Array,
+    kv_len: jax.Array,
+    kind: str,
+    cfg: BCQConfig,
+    cb: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The shared page-gather online-softmax attention over a page pool.
+
+    q: (B, C, H, D) queries — query c of row b sits at absolute position
+    ``kv_len[b] - C + c`` and sees page token t iff ``t <= qpos`` (decode
+    is C == 1 with kv_len = live tokens; chunked prefill is C = chunk with
+    kv_len = n_past + C).  pool leaves: (n_pages, ps, Hkv, ...) per
+    ``cache_init`` layout; block_tables (B, MAXP) int32.  Returns
+    (B, C, H, D) f32.  See the module docstring for the grid schedule."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    b, nq, h, d = q.shape
+    interpret = resolve_interpret(interpret)
+    maxp = block_tables.shape[1]
+    if kind == "bcq4" and d % cfg.array_len:
+        # per-head-vector cache quantization shrinks L_A to d_head
+        cfg = dataclasses.replace(cfg, array_len=min(cfg.array_len, d))
+    k_leaves, v_leaves = page_pool_leaves(pool, kind)
+    ps = k_leaves[0].shape[1]
+    hkv = k_leaves[0].shape[2]
+    rep = h // hkv
+    assert h == hkv * rep, (h, hkv)
+
+    sid, pin, first, last, live = page_schedule(kv_len, ps, maxp)
+
+    def page_spec(leaf):
+        blk = (1,) + leaf.shape[1:]
+        nd = leaf.ndim
+        return pl.BlockSpec(
+            blk,
+            lambda t, bt, kvl, sid, pin, *_, _nd=nd: (bt[sid[t], pin[t]],)
+            + (0,) * (_nd - 1),
+        )
+
+    def row_spec(shape):
+        nd = len(shape)
+        return pl.BlockSpec(
+            (1,) + shape[1:],
+            lambda t, bt, kvl, sid, *_, _nd=nd: (sid[t],) + (0,) * (_nd - 1),
+        )
+
+    inputs = [q] + k_leaves + v_leaves
+    in_specs = [row_spec(q.shape)]
+    in_specs += [page_spec(leaf) for leaf in k_leaves + v_leaves]
+    if kind == "bcq4":
+        sx = jnp.stack([pool["k_sx"], pool["v_sx"]]).reshape(1, 2).astype(jnp.float32)
+        cbf = cb.astype(jnp.float32).reshape(-1, 1)
+        inputs += [sx, cbf]
+        in_specs += [
+            pl.BlockSpec((1, 2), lambda t, *_: (0, 0)),
+            pl.BlockSpec(cbf.shape, lambda t, *_: (0, 0)),
+        ]
+
+    kernel = functools.partial(
+        _page_gather_kernel,
+        kind=kind, cfg=cfg, ps=ps, hkv=hkv, rep=rep, scale=d**-0.5, nq=nq,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(b * maxp,),
+        in_specs=in_specs,
+        out_specs=row_spec(q.shape),
+        scratch_shapes=[
+            pltpu.VMEM((h, nq), jnp.float32),
+            pltpu.VMEM((h, nq), jnp.float32),
+            pltpu.VMEM((h, nq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nq, h, d), jnp.float32),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32), kv_len.astype(jnp.int32),
+        sid, pin, first, last, live, *inputs,
+    )

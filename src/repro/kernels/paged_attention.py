@@ -1,18 +1,21 @@
 """Pallas TPU paged-attention decode kernel (vLLM-style block tables).
 
-Decode attention over a paged KV cache: each sequence's pages are gathered
-through its block table — prefetched as scalars so the BlockSpec index_map
-can DMA exactly the referenced page per grid step — and quantized pages
-(int8 / packed-BCQ4) are dequantized **in-kernel** on the fly in VMEM.  Per
-decode step the kernel therefore reads only the live pages of each
-sequence from HBM, never the max-length cache, and for quantized kinds the
-HBM traffic is the packed bytes (≈4.7 bits/scalar for BCQ4), not the
-dequantized bf16.
+Decode attention over a paged KV cache, now a thin wrapper over the shared
+page-gather core (``kernels.common.page_gather_attention`` — DESIGN lives
+there): each sequence's pages are gathered through its block table,
+prefetched as scalars so the BlockSpec index maps can DMA exactly the
+referenced page per grid step, and quantized pages (int8 / packed-BCQ4)
+dequantize **in-kernel** in VMEM — bcq4 via the one-hot·codebook MXU
+matmul, not a VPU flat-gather.  The grid is **live-page-only**: sequence b
+contributes ``ceil(len/ps)`` steps (its live pages), never the
+``(B, MAXP)`` sweep with masked NULL-page DMAs, so per decode step the
+kernel reads exactly the live packed pages of each sequence from HBM
+(≈4.7 bits/scalar for BCQ4), and NULL block-table padding moves zero
+bytes.
 
-Schedule: grid (B, MAXP); per (sequence, page) step an online-softmax
-update (running max m, normalizer l, accumulator acc in VMEM scratch) over
-the page's ``page_size`` tokens, masked by the sequence length; the (H, D)
-output is written on the last page.
+Decode is the C == 1 case of the core: a single query at absolute
+position ``len - 1`` under the core's ``tpos <= qpos`` mask sees exactly
+the ``len`` live tokens.
 
 Validated in interpret mode against ``kernels.ref.paged_attention_ref``
 (tests/test_paged_kernel.py); on TPU this is the drop-in decode-attention
@@ -20,87 +23,12 @@ for the paged serving engine (Runtime.paged_kernel).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core.bcq import BCQConfig, unpack_nibbles
-from repro.core.formats import bits_to_e4m3_impl
+from repro.core.bcq import BCQConfig
+from repro.kernels.common import NEG, dequant_page, page_gather_attention
 
-NEG = -1e30
-
-
-def _dequant_page(kind, refs, cfg: BCQConfig, cb_ref, sx):
-    """Dequantize one page's K or V to f32 (ps, Hkv, D) inside the kernel."""
-    if kind == "bf16":
-        return refs[0][0].astype(jnp.float32)
-    if kind == "int8":
-        q = refs[0][0].astype(jnp.float32)  # (ps, Hkv, D)
-        s = refs[1][0]  # (ps, Hkv) f32
-        return q * s[..., None]
-    # bcq4: packed nibble indices + selectors, E4M3 scale codes
-    idx = unpack_nibbles(refs[0][0]).astype(jnp.int32)  # (ps, Hkv, D)
-    d = idx.shape[-1]
-    nb = d // cfg.block_len
-    sel = unpack_nibbles(refs[1][0]).astype(jnp.int32)[..., :nb]
-    ratio = bits_to_e4m3_impl(refs[2][0])  # (ps, Hkv, na)
-    inv = jnp.where(ratio > 0, 1.0 / (ratio * sx), 0.0)
-    flat = cb_ref[...].reshape(-1)
-    vals = flat[jnp.repeat(sel, cfg.block_len, -1) * cfg.n_entries + idx]
-    return vals * jnp.repeat(inv, cfg.array_len, -1)
-
-
-def _paged_kernel(
-    bt_ref, len_ref, *args, kind, cfg, ps, rep, scale
-):
-    nk = {"bf16": 1, "int8": 2, "bcq4": 3}[kind]
-    q_ref = args[0]
-    k_refs = args[1 : 1 + nk]
-    v_refs = args[1 + nk : 1 + 2 * nk]
-    extra = args[1 + 2 * nk :]
-    if kind == "bcq4":
-        sx_ref, cb_ref = extra[0], extra[1]
-        o_ref, m_ref, l_ref, acc_ref = extra[2], extra[3], extra[4], extra[5]
-        k_sx, v_sx = sx_ref[0, 0], sx_ref[0, 1]
-    else:
-        cb_ref, k_sx, v_sx = None, None, None
-        o_ref, m_ref, l_ref, acc_ref = extra[0], extra[1], extra[2], extra[3]
-
-    b = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0].astype(jnp.float32)  # (H, D)
-    kf = _dequant_page(kind, k_refs, cfg, cb_ref, k_sx)  # (ps, Hkv, D)
-    vf = _dequant_page(kind, v_refs, cfg, cb_ref, v_sx)
-    if rep > 1:
-        kf = jnp.repeat(kf, rep, axis=1)
-        vf = jnp.repeat(vf, rep, axis=1)
-
-    s = jnp.einsum("hd,thd->ht", q, kf) * scale  # (H, ps)
-    tpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-    s = jnp.where(tpos < len_ref[b], s, NEG)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.einsum("ht,thd->hd", p, vf)
-    m_ref[...] = m_new
-
-    @pl.when(j == pl.num_programs(1) - 1)
-    def _done():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
-            o_ref.dtype
-        )
+__all__ = ["paged_attention", "NEG", "dequant_page"]
 
 
 def paged_attention(
@@ -118,67 +46,7 @@ def paged_attention(
     pool leaves: (n_pages, page_size, Hkv, ...) per ``cache_init`` layout;
     block_tables (B, MAXP) int32; lengths (B,) live tokens per sequence.
     Returns (B, H, D) f32."""
-    import jax.experimental.pallas.tpu as pltpu
-    import dataclasses as _dc
-
-    from repro.kernels.common import resolve_interpret
-
-    b, h, d = q.shape
-    interpret = resolve_interpret(interpret)
-    maxp = block_tables.shape[1]
-
-    def page_spec(leaf):
-        blk = (1,) + leaf.shape[1:]
-        nd = leaf.ndim
-        return pl.BlockSpec(blk, lambda bb, jj, bt, ln, _nd=nd: (bt[bb, jj],) + (0,) * (_nd - 1))
-
-    if kind == "bf16":
-        k_leaves, v_leaves = [pool["k"]], [pool["v"]]
-    elif kind == "int8":
-        k_leaves = [pool["k"], pool["k_scale"]]
-        v_leaves = [pool["v"], pool["v_scale"]]
-    elif kind == "bcq4":
-        # per-head-vector cache quantization shrinks L_A to d_head when needed
-        if d % cfg.array_len:
-            la = min(cfg.array_len, d)
-            cfg = _dc.replace(cfg, array_len=la)
-        k_leaves = [pool["k_idx"], pool["k_sel"], pool["k_scale"]]
-        v_leaves = [pool["v_idx"], pool["v_sel"], pool["v_scale"]]
-    else:
-        raise ValueError(kind)
-    ps = k_leaves[0].shape[1]
-    hkv = k_leaves[0].shape[2]
-    rep = h // hkv
-
-    inputs = [q] + k_leaves + v_leaves
-    in_specs = [pl.BlockSpec((1, h, d), lambda bb, jj, bt, ln: (bb, 0, 0))]
-    in_specs += [page_spec(leaf) for leaf in k_leaves + v_leaves]
-    if kind == "bcq4":
-        sx = jnp.stack([pool["k_sx"], pool["v_sx"]]).reshape(1, 2).astype(jnp.float32)
-        cbm = cb.astype(jnp.float32)
-        inputs += [sx, cbm]
-        in_specs += [
-            pl.BlockSpec((1, 2), lambda bb, jj, bt, ln: (0, 0)),
-            pl.BlockSpec(cbm.shape, lambda bb, jj, bt, ln: (0, 0)),
-        ]
-
-    kernel = functools.partial(
-        _paged_kernel, kind=kind, cfg=cfg, ps=ps, rep=rep, scale=d**-0.5
+    out = page_gather_attention(
+        q[:, None], pool, block_tables, lengths, kind, cfg, cb, interpret
     )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, maxp),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, h, d), lambda bb, jj, bt, ln: (bb, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((h,), jnp.float32),
-            pltpu.VMEM((h,), jnp.float32),
-            pltpu.VMEM((h, d), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
-        interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *inputs)
+    return out[:, 0]

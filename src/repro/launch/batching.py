@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.serving.generate import (  # noqa: F401  (Request re-exported)
     Request,
+    api_jit,
     next_greedy_tokens,
     pick_token,
     sequence_finished,
@@ -56,7 +57,9 @@ class ContinuousBatcher:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
         self.caches = api.cache_init(n_slots, max_len)
-        self._decode = jax.jit(api.decode_fn)
+        # share one decode compilation per ModelAPI across batcher
+        # instances (prefill stays eager — its shape varies per prompt)
+        self._decode, _ = api_jit(api, "contig_decode", api.decode_fn)
         self._next_tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.finished: list[Request] = []
 

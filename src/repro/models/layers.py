@@ -447,7 +447,8 @@ def paged_token_write(pool, k_new, v_new, page_ids, offsets, kind, cfg: BCQConfi
     return out
 
 
-def paged_chunk_write(pool, k_new, v_new, chunk_page_ids, kind, cfg: BCQConfig, cb):
+def paged_chunk_write(pool, k_new, v_new, chunk_page_ids, kind, cfg: BCQConfig, cb,
+                      chunk_len=None):
     """Quantize a prefill chunk's K/V and scatter it into pool pages.
 
     pool: single-layer page-pool tree, leaves (P, ps, H, ...);
@@ -459,7 +460,14 @@ def paged_chunk_write(pool, k_new, v_new, chunk_page_ids, kind, cfg: BCQConfig, 
     Quantization is per (token, head) vector — bit-identical to what a
     full-prompt prefill writes for the same tokens, so chunked pages are
     byte-for-byte the pages scatter_prefill_pages would have produced
-    (the tail beyond C holds cache_init zeros either way)."""
+    (the tail beyond C holds cache_init zeros either way).
+
+    ``chunk_len`` (B,) int32, optional: valid tokens per row when C is a
+    padded bucket (the batched engine tick stacks ragged tail chunks into
+    one launch).  Encoded leaves past each row's chunk_len are reset to
+    the all-zero ``cache_init`` state before the scatter, so a padded row
+    writes byte-identical pages to an exact-length launch; pages wholly
+    past a row's chunk route to NULL_PAGE via ``chunk_page_ids``."""
     b = k_new.shape[0]
     ps = pool_page_size(pool)
     n_cp = chunk_page_ids.shape[1]
@@ -468,11 +476,17 @@ def paged_chunk_write(pool, k_new, v_new, chunk_page_ids, kind, cfg: BCQConfig, 
         if n in pool:
             stage[n] = pool[n]
     enc = cache_write(stage, k_new, v_new, 0, kind, cfg, cb)
+    if chunk_len is not None:
+        pos = jnp.arange(n_cp * ps, dtype=jnp.int32)
+        valid = pos[None, :] < chunk_len[:, None]  # (B, n_cp·ps)
     out = dict(pool)
     for n, leaf in pool.items():
         if getattr(leaf, "ndim", 0) < 2:
             continue  # per-tensor scales are pool-global
         src = enc[n]  # (B, n_cp·ps, ...)
+        if chunk_len is not None:
+            m = valid.reshape(valid.shape + (1,) * (src.ndim - 2))
+            src = jnp.where(m, src, jnp.zeros_like(src))
         pages = src.reshape((b, n_cp, ps) + src.shape[2:])
         out[n] = leaf.at[chunk_page_ids].set(pages.astype(leaf.dtype))
     return out
@@ -694,12 +708,16 @@ def attention(
     ``paged``: (pool, block_tables, lengths) page-pool state; the new token
     is scattered into its page and attention gathers live pages only.
     Returns (out, new_pool).
-    A 4-tuple ``paged`` = (pool, block_tables, n_past, chunk_page_ids) is
-    the CHUNKED-PREFILL path: x is a whole prompt chunk starting at
-    page-aligned position ``n_past``; its K/V are quantized and scattered
-    whole-page into ``chunk_page_ids``, and the chunk attends causally to
-    itself plus every earlier page through the block table — prefix-hit
-    pages are read (gather + dequant), never recomputed."""
+    A 4/5-tuple ``paged`` = (pool, block_tables, n_past, chunk_page_ids
+    [, chunk_len]) is the CHUNKED-PREFILL path: x is a whole prompt chunk
+    starting at page-aligned position ``n_past``; its K/V are quantized and
+    scattered whole-page into ``chunk_page_ids``, and the chunk attends
+    causally to itself plus every earlier page through the block table —
+    prefix-hit pages are read (gather + dequant), never recomputed.
+    ``chunk_len`` (B,) marks each row's valid tokens when the chunk axis is
+    a padded bucket (batched engine tick); padded positions write the
+    cache_init zero state and their attention rows are discarded by the
+    caller."""
     b, s, _ = x.shape
     hd = cfg.head_dim
     if kv_override is None:
@@ -714,10 +732,12 @@ def attention(
         q = qdense(x, p["wq"], rt, cb).reshape(b, s, cfg.n_heads, hd)
         k, v = kv_override
 
-    if paged is not None and len(paged) == 4:
-        pool, block_tables, n_past, chunk_page_ids = paged
+    if paged is not None and len(paged) >= 4:
+        pool, block_tables, n_past, chunk_page_ids = paged[:4]
+        chunk_len = paged[4] if len(paged) == 5 else None
         new_pool = paged_chunk_write(
-            pool, k, v, chunk_page_ids, rt.cache_kind, rt.bcq_cfg, cb
+            pool, k, v, chunk_page_ids, rt.cache_kind, rt.bcq_cfg, cb,
+            chunk_len=chunk_len,
         )
         if rt.paged_kernel and window is None:
             from repro.kernels.chunked_prefill import chunked_prefill

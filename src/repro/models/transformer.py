@@ -224,7 +224,7 @@ def paged_decode_step(params, pool, tokens, block_tables, lengths, cfg: ArchConf
 
 
 def prefill_from_pages(params, tokens, pool, block_tables, n_past, chunk_page_ids,
-                       cfg: ArchConfig, rt: Runtime):
+                       cfg: ArchConfig, rt: Runtime, chunk_len=None):
     """Chunked prefill: run ONE prompt chunk against a shared page pool.
 
     tokens: (B, C) the uncached chunk of each prompt, starting at
@@ -236,14 +236,28 @@ def prefill_from_pages(params, tokens, pool, block_tables, n_past, chunk_page_id
     itself and, via the block table, to every earlier page — prefix-hit
     pages are READ (gather + in-kernel dequant with Runtime.paged_kernel),
     never recomputed, which is what makes a prefix hit save prefill
-    compute and not just page memory.  Returns (last-position logits,
+    compute and not just page memory.
+
+    ``chunk_len`` (B,) int32, optional: valid tokens per row when C is a
+    padded shape bucket — the batched engine tick stacks EVERY prefilling
+    slot's chunk (ragged tails included) into this one launch.  Padded
+    positions write the cache_init zero page state and the returned logits
+    are gathered at each row's own last valid position (``chunk_len-1``)
+    instead of column C-1.  Returns (last-position logits (B, 1, V),
     pool) — the logits only matter on a prompt's final chunk."""
     b, s = tokens.shape
     x = embed_tokens(params, tokens, rt)
     positions = n_past[:, None] + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    paged_tables = (block_tables, n_past, chunk_page_ids)
+    if chunk_len is not None:
+        paged_tables += (chunk_len,)
     x, pool, _ = backbone(
-        params, x, cfg, rt, positions, pool,
-        paged_tables=(block_tables, n_past, chunk_page_ids),
+        params, x, cfg, rt, positions, pool, paged_tables=paged_tables,
     )
-    logits = lm_logits(params, x[:, -1:, :], rt)
+    if chunk_len is None:
+        x_last = x[:, -1:, :]
+    else:
+        last = jnp.clip(chunk_len.astype(jnp.int32) - 1, 0, s - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B, 1, D)
+    logits = lm_logits(params, x_last, rt)
     return logits, pool

@@ -71,8 +71,10 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
                 p, pool, t, bt, ln, cfg, rt
             ),
             pool_init=lambda n_pages, ps: transformer.cache_init_stacked(cfg, rt, n_pages, ps),
-            prefill_from_pages_fn=lambda p, t, pool, bt, n_past, ids: (
-                transformer.prefill_from_pages(p, t, pool, bt, n_past, ids, cfg, rt)
+            prefill_from_pages_fn=lambda p, t, pool, bt, n_past, ids, chunk_len=None: (
+                transformer.prefill_from_pages(
+                    p, t, pool, bt, n_past, ids, cfg, rt, chunk_len=chunk_len
+                )
             ),
         )
     if fam == "ssm":

@@ -25,7 +25,13 @@ ONE ``prefill_chunk``-token chunk (``models.transformer.prefill_from_pages``:
 the chunk attends causally to itself and, through its block table, to the
 already-written pages; with Runtime.paged_kernel the gather + dequant runs
 in the Pallas chunked-prefill kernel) before the fused decode tick serves
-the decoding slots.  Prefill compute is therefore spread across ticks and
+the decoding slots.  ALL prefilling slots ride ONE launch per tick
+(stacked tables / chunk starts / scatter ids, per-slot ``chunk_len``
+masks), and serving shapes are **bucketed** so steady state stops
+retracing: ragged tail chunks round up to power-of-two token buckets, the
+prefill batch pads to a power of two, and block tables grow by doubling —
+``trace_counts()`` reports the (bounded) compilation count.  Prefill
+compute is therefore spread across ticks and
 interleaved with decode (mixed prefill/decode scheduling), new pages are
 written as each chunk completes, and a prefix hit saves *compute*, not
 just page memory: the engine runs zero transformer work — zero attention
@@ -70,6 +76,7 @@ tests/test_paged_engine.py and tests/test_chunked_prefill.py.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -80,6 +87,7 @@ import numpy as np
 from repro.serving import pages as pages_lib
 from repro.serving.generate import (
     Request,
+    api_jit,
     next_greedy_tokens,
     pick_token,
     sequence_finished,
@@ -99,6 +107,23 @@ class PromptTooLongError(ValueError):
 class PagePoolExhaustedError(RuntimeError):
     """The page pool cannot serve the pending request even with every
     reclaimable prefix page evicted and every other sequence preempted."""
+
+
+# -------------------------------------------------- shared jit plumbing
+# Per-ModelAPI jit caching lives in serving.generate.api_jit (shared with
+# ContinuousBatcher); the page ops are api-independent, so one module-level
+# jit each is enough for every engine instance.
+_SCATTER = jax.jit(pages_lib.scatter_prefill_pages)
+_COPY_PAGE = jax.jit(pages_lib.copy_page)
+
+
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two ≥ n, capped (shape-bucketing: bounded trace
+    count instead of one compilation per distinct size)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 @dataclasses.dataclass
@@ -131,6 +156,7 @@ class PagedEngine:
         watermark: Optional[int] = None,
         chunked_prefill: bool = False,
         prefill_chunk: int = 16,
+        profile_sync: bool = False,
     ):
         assert api.paged_decode_fn is not None, "family has no paged serving path"
         assert max_len % page_size == 0, "page_size must divide max_len"
@@ -144,6 +170,12 @@ class PagedEngine:
         self.prefix_caching = prefix_caching
         self.chunked = chunked_prefill
         self.prefill_chunk = prefill_chunk
+        # profile_sync: block on every prefill launch so the per-tick
+        # latency split (stats t_prefill_s / t_decode_s) attributes device
+        # time exactly — otherwise a mid-prompt launch's device work drains
+        # inside the decode tick's sync and skews the split.  Off by
+        # default: production keeps host/device overlap (benches opt in).
+        self.profile_sync = profile_sync
         if chunked_prefill:
             assert api.prefill_from_pages_fn is not None, (
                 "family has no chunked-prefill path"
@@ -167,22 +199,44 @@ class PagedEngine:
         self.finished: list[Request] = []
         self._next_tok = np.zeros((n_slots,), np.int32)
         self._admit_counter = 0
-        self._prefill = jax.jit(
-            lambda p, t: self.api.prefill_fn(p, {"tokens": t}, self.max_len)
+        self._prefill, c_pre = api_jit(
+            api, ("prefill", max_len),
+            lambda p, t, _a=api, _ml=max_len: _a.prefill_fn(p, {"tokens": t}, _ml),
         )
-        self._scatter = jax.jit(pages_lib.scatter_prefill_pages)
-        self._decode = jax.jit(api.paged_decode_fn)
-        self._copy_page = jax.jit(pages_lib.copy_page)
+        self._scatter = _SCATTER
+        self._decode, c_dec = api_jit(api, "paged_decode", api.paged_decode_fn)
+        self._copy_page = _COPY_PAGE
+        c_chunk = {"traces": 0}
         if chunked_prefill:
-            # retraces per (chunk_len, chunk_pages, table_width) triple —
-            # page-aligned chunks keep that to one shape per prompt tail
-            self._chunk_step = jax.jit(api.prefill_from_pages_fn)
+            # ONE launch per tick for every prefilling slot; shapes bucket
+            # to powers of two (chunk length, prefill batch) and tables
+            # grow by doubling, so steady-state serving retraces a bounded
+            # (bucket-count) number of times — never O(requests)
+            self._chunk_step, c_chunk = api_jit(
+                api, "chunk_step", api.prefill_from_pages_fn
+            )
+        self._trace_counters = {"prefill": c_pre, "decode": c_dec, "chunk": c_chunk}
+        self._trace_base = {k: v["traces"] for k, v in self._trace_counters.items()}
         self.stats = {
             "prefix_hits": 0, "prefix_misses": 0, "preemptions": 0,
             "prefix_evictions": 0, "peak_pages": 0, "decode_ticks": 0,
             "prefill_chunks": 0, "prefill_tokens": 0,
-            "prefill_tokens_skipped": 0,
+            "prefill_tokens_skipped": 0, "prefill_launches": 0,
             "forks": 0, "cow_copies": 0, "shared_pages": 0,
+            # per-tick latency split (wall-clock around each launch,
+            # synced on the logits; includes trace time on a cold shape —
+            # warm up first for steady-state numbers)
+            "t_prefill_s": 0.0, "t_decode_s": 0.0,
+        }
+
+    def trace_counts(self, since_init: bool = True) -> dict:
+        """Traces of the prefill / decode / chunk step functions.  The
+        callables are shared per ModelAPI; ``since_init`` subtracts the
+        counts observed when THIS engine was built (so a warmed api
+        reports ~0 for a steady-state run)."""
+        return {
+            k: v["traces"] - (self._trace_base[k] if since_init else 0)
+            for k, v in self._trace_counters.items()
         }
 
     # ------------------------------------------------------------ intake
@@ -255,11 +309,17 @@ class PagedEngine:
 
     def _grow_tables(self, n_seq_pages: int):
         """Widen every block table to ≥ n_seq_pages columns (chunked mode
-        only — lifts the plen < max_len slab limit; decode retraces once
-        per growth)."""
+        only — lifts the plen < max_len slab limit).  Growth DOUBLES the
+        width instead of padding to the exact need: table width is a jit
+        shape for both ticks, so doubling bounds the retrace count at
+        log2(longest prompt / max_len) instead of one per distinct
+        prompt-page count."""
         if n_seq_pages <= self.tables.shape[1]:
             return
-        pad = n_seq_pages - self.tables.shape[1]
+        width = self.tables.shape[1]
+        while width < n_seq_pages:
+            width *= 2
+        pad = width - self.tables.shape[1]
         self.tables = np.pad(
             self.tables, ((0, 0), (0, pad)), constant_values=NULL_PAGE
         )
@@ -344,7 +404,11 @@ class PagedEngine:
         # reduction order and greedy tokens — match the contiguous engine),
         # then scatter the missed pages; shared pages are never rewritten.
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        t0 = time.perf_counter()
         logits, cache1 = self._prefill(self.params, tokens)
+        logits = jax.block_until_ready(logits)
+        self.stats["t_prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_launches"] += 1
         self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
         if self.prefix_caching:
             for i in range(len(hits), n_full):
@@ -573,47 +637,104 @@ class PagedEngine:
         return True
 
     # ------------------------------------------------------ chunked prefill
-    def _prefill_tick(self, i: int) -> int:
-        """Advance prefilling slot i by ONE chunk.  Allocates the chunk's
-        pages (preempting if dry), runs prefill_from_pages over the chunk,
-        registers freshly completed full pages, and flips the slot to
-        decode mode after the prompt's last chunk.  Returns 1 if a chunk
-        ran (0 if the slot was preempted while allocating)."""
-        slot = self.slots[i]
-        prompt = slot.pending
-        plen = len(prompt)
-        start = slot.pos  # page-aligned: chunks are page multiples
-        c = min(self.prefill_chunk, plen - start)
-        first_page = start // self.ps
-        n_cp = pages_needed(c, self.ps)
-        ids = np.zeros((n_cp,), np.int32)
-        for k in range(n_cp):
-            pid = self._alloc_page_preempting(i)
-            if pid is None:
-                return 0  # slot preempted (requeued) or pool truly dry
-            self.tables[i][first_page + k] = pid
-            ids[k] = pid
+    def _chunk_bucket(self, c: int) -> int:
+        """Chunk-length shape bucket: full chunks keep ``prefill_chunk``
+        (page-aligned by construction); a ragged final chunk rounds up to
+        the next power of two (≤ prefill_chunk) — ≤ log2(prefill_chunk)+1
+        distinct token shapes ever reach the chunk step."""
+        if c >= self.prefill_chunk:
+            return self.prefill_chunk
+        return _pow2_bucket(c, self.prefill_chunk)
 
-        tokens = jnp.asarray(prompt[start : start + c], jnp.int32)[None, :]
+    def _prefill_tick_all(self) -> int:
+        """Advance EVERY prefilling slot by one chunk in a SINGLE
+        ``prefill_from_pages`` launch (stacked block tables / chunk starts
+        / scatter ids, per-slot chunk_len masks) — one kernel launch per
+        tick regardless of how many slots are prefilling, where the old
+        per-slot loop paid one launch each.  Allocates each slot's chunk
+        pages first (slot order, preempting if dry — a slot preempted by a
+        later slot's allocation drops out of the batch), pads the batch
+        and chunk axes to power-of-two buckets, then registers freshly
+        completed full pages and flips finished slots to decode mode.
+        Returns the number of slots that advanced."""
+        plans: dict[int, tuple[int, int, np.ndarray]] = {}
+        for i in range(self.n_slots):
+            slot = self.slots[i]
+            if slot.req is None or slot.mode != "prefill":
+                continue
+            start = slot.pos  # page-aligned: chunks are page multiples
+            c = min(self.prefill_chunk, len(slot.pending) - start)
+            first_page = start // self.ps
+            n_cp = pages_needed(c, self.ps)
+            ids = np.full((n_cp,), NULL_PAGE, np.int32)
+            ok = True
+            for k in range(n_cp):
+                pid = self._alloc_page_preempting(i)
+                if pid is None:
+                    ok = False  # slot preempted (requeued) or pool truly dry
+                    break
+                self.tables[i][first_page + k] = pid
+                ids[k] = pid
+            if ok:
+                plans[i] = (start, c, ids)
+        # a later slot's allocation may have preempted an earlier planned
+        # slot — keep only slots still prefilling (their pages were freed)
+        batch = [
+            i for i in plans
+            if self.slots[i].req is not None and self.slots[i].mode == "prefill"
+        ]
+        if not batch:
+            return 0
+
+        c_bucket = self._chunk_bucket(max(plans[i][1] for i in batch))
+        n_cp_b = pages_needed(c_bucket, self.ps)
+        bb = _pow2_bucket(len(batch), self.n_slots)
+        tok = np.zeros((bb, c_bucket), np.int32)
+        npast = np.zeros((bb,), np.int32)
+        ids_b = np.full((bb, n_cp_b), NULL_PAGE, np.int32)
+        clen = np.zeros((bb,), np.int32)
+        bt = np.full((bb, self.tables.shape[1]), NULL_PAGE, np.int32)
+        for r, i in enumerate(batch):
+            start, c, ids = plans[i]
+            tok[r, :c] = self.slots[i].pending[start : start + c]
+            npast[r] = start
+            ids_b[r, : len(ids)] = ids
+            clen[r] = c
+            bt[r] = self.tables[i]
+        t0 = time.perf_counter()
         logits, self.pool = self._chunk_step(
-            self.params, tokens, self.pool,
-            pages_lib.as_block_table_array(self.tables[i : i + 1]),
-            jnp.asarray([start], jnp.int32),
-            jnp.asarray(ids[None, :], jnp.int32),
+            self.params, jnp.asarray(tok), self.pool,
+            pages_lib.as_block_table_array(bt),
+            jnp.asarray(npast), jnp.asarray(ids_b), jnp.asarray(clen),
         )
-        slot.pos = start + c
-        self.stats["prefill_chunks"] += 1
-        self.stats["prefill_tokens"] += c
-        if self.prefix_caching:
-            for p in range(first_page, min(slot.pos // self.ps, len(slot.hashes))):
-                self.prefix.register(slot.hashes[p], int(self.tables[i][p]))
+        if self.profile_sync or any(
+            plans[i][0] + plans[i][1] == len(self.slots[i].pending) for i in batch
+        ):
+            # a slot finishes its prompt: the logits are consumed on host
+            # right below, so this sync is free — and it makes the timing
+            # split exact for exactly the ticks that produce tokens.
+            # Mid-prompt ticks skip the sync to keep host/device overlap
+            # unless profile_sync asks for an exact split.
+            logits = jax.block_until_ready(logits)
+        self.stats["t_prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_launches"] += 1
 
-        if slot.pos == plen:  # prompt done — first token(s), start decoding
-            slot.mode = "decode"
-            slot.pending = None
-            slot.hashes = None
-            self._start_decode(i, logits)  # forks here when n_samples > 1
-        return 1
+        for r, i in enumerate(batch):
+            start, c, _ = plans[i]
+            slot = self.slots[i]
+            slot.pos = start + c
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens"] += c
+            if self.prefix_caching:
+                first_page = start // self.ps
+                for p in range(first_page, min(slot.pos // self.ps, len(slot.hashes))):
+                    self.prefix.register(slot.hashes[p], int(self.tables[i][p]))
+            if slot.pos == len(slot.pending):  # prompt done — start decoding
+                slot.mode = "decode"
+                slot.pending = None
+                slot.hashes = None
+                self._start_decode(i, logits[r : r + 1])  # forks if n_samples > 1
+        return len(batch)
 
     # ------------------------------------------------------------- ticks
     def _active(self):
@@ -623,15 +744,13 @@ class PagedEngine:
         return [i for i, s in enumerate(self.slots) if s.req is not None and s.mode == "decode"]
 
     def step(self) -> int:
-        """Admit + one chunk for every prefilling slot + ONE fused decode
-        tick for all decoding slots (any mix of positions) — chunked
-        prefill interleaves with decode instead of blocking admission.
-        Returns the number of slots served (chunks + decoded)."""
+        """Admit + ONE batched chunk launch covering every prefilling slot
+        + ONE fused decode tick for all decoding slots (any mix of
+        positions) — chunked prefill interleaves with decode instead of
+        blocking admission.  Returns the number of slots served (chunks +
+        decoded)."""
         self._admit()
-        served = 0
-        for i in list(range(self.n_slots)):
-            if self.slots[i].req is not None and self.slots[i].mode == "prefill":
-                served += self._prefill_tick(i)
+        served = self._prefill_tick_all()
 
         active = [i for i in self._decoding() if self._ensure_tail_page(i)]
         active = [i for i in active if self.slots[i].req is not None and self.slots[i].mode == "decode"]
@@ -649,6 +768,7 @@ class PagedEngine:
             for i in range(self.n_slots):
                 if i not in active:
                     bt[i] = NULL_PAGE
+        t0 = time.perf_counter()
         logits, self.pool = self._decode(
             self.params,
             self.pool,
@@ -656,11 +776,15 @@ class PagedEngine:
             pages_lib.as_block_table_array(bt),
             jnp.asarray(lengths, jnp.int32),
         )
+        logits = jax.block_until_ready(logits)
+        self.stats["t_decode_s"] += time.perf_counter() - t0
         self.stats["decode_ticks"] += 1
         nxt = np.asarray(next_greedy_tokens(logits))
-        last = None  # last-position logits, fetched only if someone samples
+        last = None  # last-position logits: ONE device→host fetch when any
+        # slot samples (indexing per slot on-device issued one tiny
+        # transfer per sampling slot per tick)
         if any(not self.slots[i].req.sampling.greedy for i in active):
-            last = logits[:, -1, :]
+            last = np.asarray(logits[:, -1, :])
         for i in active:
             slot = self.slots[i]
             # the sampled token's absolute sequence index is pos + 1: the

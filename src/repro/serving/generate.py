@@ -79,6 +79,31 @@ class Request:
     )
 
 
+def api_jit(api, key, fn):
+    """jit ``fn`` once per (api, key), with a trace counter.
+
+    Device-step callables are cached PER ModelAPI (not per engine): every
+    engine built over the same api shares one compilation per shape
+    bucket, so a warmup engine genuinely warms the serving engine and N
+    engine instances stop recompiling N times.  Each cached entry is
+    ``(jitted_fn, {"traces": n})`` — the wrapped python body runs once per
+    jit trace, which is the measurable contract behind the serving-shape
+    bucketing policy (see ``PagedEngine.trace_counts``)."""
+    cache = getattr(api, "_engine_jit_cache", None)
+    if cache is None:
+        cache = {}
+        api._engine_jit_cache = cache
+    if key not in cache:
+        counts = {"traces": 0}
+
+        def counted(*args, _fn=fn, _c=counts):
+            _c["traces"] += 1  # python body runs once per jit trace
+            return _fn(*args)
+
+        cache[key] = (jax.jit(counted), counts)
+    return cache[key]
+
+
 def next_greedy_tokens(logits) -> jnp.ndarray:
     """(B, S, V) logits → (B,) greedy next token at the last position."""
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -211,6 +211,95 @@ def test_mixed_prefill_decode_ticks():
     assert got == ref
 
 
+def test_one_chunk_launch_per_engine_tick():
+    """ALL prefilling slots ride ONE prefill_from_pages launch per tick —
+    the launch count equals the number of prefill ticks, never the number
+    of (slot, chunk) pairs — with token-for-token equivalence to the
+    non-chunked reference engine preserved."""
+    api, params = _api_params("bf16")
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, CFG.vocab, size=n).astype(np.int32) for n in (24, 20, 17)
+    ]
+    ref, _ = _run(
+        PagedEngine(api, params, n_slots=3, max_len=MAX_LEN, page_size=PS),
+        [Request(rid=i, prompt=p, max_new=4) for i, p in enumerate(prompts)],
+    )
+
+    eng = PagedEngine(
+        api, params, n_slots=3, max_len=MAX_LEN, page_size=PS,
+        chunked_prefill=True, prefill_chunk=PS,
+    )
+    calls = [0]
+    inner = eng._chunk_step
+
+    def counting(*args):
+        calls[0] += 1
+        return inner(*args)
+
+    eng._chunk_step = counting
+    got, _ = _run(eng, [Request(rid=i, prompt=p, max_new=4) for i, p in enumerate(prompts)])
+    assert got == ref
+    # 3 prompts × 3 chunks each = 9 chunks, but 3 slots prefill together:
+    # one launch per tick, so far fewer launches than chunks
+    assert calls[0] == eng.stats["prefill_launches"]
+    assert eng.stats["prefill_chunks"] == 9
+    assert calls[0] <= 4, (calls[0], eng.stats)
+
+
+def test_retrace_count_bounded_by_buckets_not_requests():
+    """Shape-bucketing regression: a mixed-length serving run traces each
+    device step a BOUNDED (bucket-count) number of times — and a second
+    wave of fresh lengths through the warmed engine adds ZERO traces
+    (steady state stops retracing).  Before bucketing, every distinct
+    tail-chunk length and every admission mix recompiled the chunk step:
+    traces grew O(requests)."""
+    api, params = _api_params("bf16")
+    rng = np.random.default_rng(6)
+    eng = PagedEngine(
+        api, params, n_slots=2, max_len=MAX_LEN, page_size=PS, n_pages=40,
+        chunked_prefill=True, prefill_chunk=2 * PS,
+    )
+    lengths_cold = (3, 5, 7, 9, 11, 14, 17, 19, 22, 25)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, CFG.vocab, size=n).astype(np.int32),
+                max_new=3)
+        for i, n in enumerate(lengths_cold)
+    ]
+    _run(eng, reqs)
+    cold = eng.trace_counts()
+    # buckets: tail chunks round to pow2 (≤ log2(prefill_chunk)+1 token
+    # shapes), prefill batch pads to pow2 (≤ log2(n_slots)+1), decode is
+    # one fixed shape — an order of magnitude under one-per-request
+    assert 0 < cold["chunk"] <= 8, cold
+    assert cold["decode"] == 1, cold
+
+    # second wave: same length mix, FRESH tokens (zero prefix hits, so the
+    # prefill really runs again) — all shapes land in warmed buckets
+    wave2 = [
+        Request(rid=100 + i, prompt=rng.integers(0, CFG.vocab, size=n).astype(np.int32),
+                max_new=3)
+        for i, n in enumerate(lengths_cold)
+    ]
+    _run(eng, wave2)
+    warm = eng.trace_counts()
+    assert warm == cold, (cold, warm)  # steady state: zero new compilations
+
+    # a second engine over the same api starts fully warm (shared jit
+    # cache): the whole workload replays without a single compilation
+    eng2 = PagedEngine(
+        api, params, n_slots=2, max_len=MAX_LEN, page_size=PS, n_pages=40,
+        chunked_prefill=True, prefill_chunk=2 * PS,
+    )
+    wave3 = [
+        Request(rid=200 + i, prompt=rng.integers(0, CFG.vocab, size=n).astype(np.int32),
+                max_new=3)
+        for i, n in enumerate(lengths_cold)
+    ]
+    _run(eng2, wave3)
+    assert sum(eng2.trace_counts().values()) == 0, eng2.trace_counts()
+
+
 def test_chunked_lifts_prompt_length_limit():
     """A prompt LONGER than max_len serves through chunked admission (block
     tables grow page-by-page) and matches a big-slab reference engine."""

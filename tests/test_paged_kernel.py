@@ -117,6 +117,61 @@ def test_null_padded_table_beyond_tail():
     np.testing.assert_allclose(np.asarray(out_a), np.asarray(ref), atol=2e-5, rtol=2e-5)
 
 
+# ------------------------------------------------- live-page grid coverage
+@pytest.mark.parametrize("kind", ("bf16", "int8", "bcq4"))
+def test_ragged_lengths_with_zero_length_padding_slots(kind):
+    """A batch mixing ragged live lengths with ZERO-length padding slots
+    (all-NULL tables — what the engine passes for inactive decode rows):
+    the live-page grid gives every row at least one step, so padded rows
+    produce the same defined output as the oracle and live rows are
+    unaffected by their neighbours."""
+    pool = _pool(kind)
+    bt = jnp.asarray(
+        [[1, 2, 3], [0, 0, 0], [4, 0, 0], [0, 0, 0]], jnp.int32
+    )
+    lengths = jnp.asarray([19, 0, 3, 0], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(11), (4, HKV, D))
+    ref = kref.paged_attention_ref(q, pool, bt, lengths, kind, CFG, CB)
+    got = paged_attention(q, pool, bt, lengths, kind, CFG, CB, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_null_heavy_tables_skip_null_page_reads():
+    """NULL-heavy block tables: the live-page schedule visits only
+    ceil(len/ps) pages per row, so poisoning the null page cannot leak into
+    any live row no matter how much of the table is padding."""
+    pool = _pool("bf16")
+    bt = jnp.asarray([[3, 0, 0, 0, 0, 0], [5, 2, 0, 0, 0, 0]], jnp.int32)
+    lengths = jnp.asarray([6, 11], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(12), (2, HKV, D))
+    out_a = paged_attention(q, pool, bt, lengths, "bf16", CFG, interpret=True)
+    pool2 = dict(pool)
+    pool2["k"] = pool["k"].at[0].set(3e4)
+    pool2["v"] = pool["v"].at[0].set(-3e4)
+    out_b = paged_attention(q, pool2, bt, lengths, "bf16", CFG, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+    ref = kref.paged_attention_ref(q, pool, bt, lengths, "bf16", CFG, CB)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_mxu_onehot_page_dequant_bitwise_exact():
+    """The one-hot·codebook MXU dequant of a bcq4 page is a bit-exact table
+    lookup: identical bytes-in → identical f32 out vs the reference
+    flat-gather (the one-hot row has a single 1.0; everything else
+    contributes an exact 0.0)."""
+    from repro.kernels.common import onehot_decode
+
+    rng = np.random.default_rng(0)
+    ne = CFG.n_entries
+    code = jnp.asarray(
+        rng.integers(0, CFG.n_codebooks * ne, size=(PS * HKV, D)), jnp.int32
+    )
+    cb_flat = CB.astype(jnp.float32).reshape(-1, 1)
+    got = onehot_decode(code, cb_flat)
+    ref = CB.astype(jnp.float32).reshape(-1)[code]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
 def test_model_paged_gather_matches_kernel():
     """The model's jnp gather+dequant decode path and the Pallas kernel
     agree on the same pool/table state (bcq4, GQA)."""
