@@ -28,9 +28,15 @@ Columns (per cache kind, in ``BENCH_paged.json``):
   step function during warmup vs the timed passes (timed must be 0:
   shape buckets, not shapes-per-request),
 * ``prefill_launch_ms`` / ``decode_tick_ms`` — per-tick latency split
-  (prefill launches vs fused decode ticks) for the chunked engine;
+  (prefill launches vs fused decode ticks) for the chunked engine, read
+  off the telemetry registry's ``prefill_launch_s`` / ``decode_tick_s``
+  histograms (one observation per batched launch / fused tick);
   ``prefill_launches`` counts ONE batched launch per tick regardless of
   how many slots are prefilling,
+* ``tok_s_telemetry_on`` / ``tok_s_telemetry_off`` /
+  ``telemetry_overhead_pct`` — the same warm workload with full
+  ("default") telemetry vs counters-only; the acceptance bar is < 2%
+  overhead, zero extra device syncs, zero extra traces,
 * ``contig_bytes`` / ``paged_bytes`` — analytic cache-HBM bytes read per
   decode step (contiguous reads B·max_len token-slots; the live-page
   grid reads ceil(len/ps)·ps live slots per sequence),
@@ -66,6 +72,7 @@ from repro.models import zoo  # noqa: E402
 from repro.models.layers import Runtime  # noqa: E402
 from repro.serving.engine import PagedEngine  # noqa: E402
 from repro.serving.generate import Request, SamplingParams  # noqa: E402
+from repro.serving.telemetry import Telemetry  # noqa: E402
 
 
 def token_slot_bytes(kind: str, n_kv: int, d_head: int, cfg: BCQConfig) -> float:
@@ -241,9 +248,54 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
     )
     skipped_per_req = [(len(r.prompt) - 1) // ps * ps for r in warm_reqs]
 
-    # per-tick latency split over the chunked engine's full run
-    launches = max(eng_ck.stats["prefill_launches"], 1)
-    dticks = max(eng_ck.stats["decode_ticks"], 1)
+    # per-tick latency split over the chunked engine's full run — read
+    # straight off the telemetry registry's histograms (one observation
+    # per batched launch / fused tick) instead of re-deriving the mean
+    # from the t_prefill_s / prefill_launches counters
+    tel_ck = eng_ck.telemetry
+    assert tel_ck.h_prefill.count == eng_ck.stats["prefill_launches"]
+    assert tel_ck.h_decode.count == eng_ck.stats["decode_ticks"]
+
+    # ---- telemetry overhead: the same warm all-prefix-hit workload on
+    # two fresh engines, "default" level (timelines + histograms + ring
+    # journal) vs "counters" level (hooks no-op).  The passes are
+    # sub-100ms on CPU and scheduler jitter (multi-ms) swamps the
+    # µs-scale python the hooks add per tick, so the comparison runs as
+    # ADJACENT PAIRS with alternating order and the assert takes the
+    # best per-pair ratio: a real per-tick cost inflates every pair,
+    # jitter hits pairs at random.
+    def overhead_engine(level):
+        return PagedEngine(
+            api, params, n_slots=args.slots, max_len=max_len, page_size=ps,
+            telemetry=Telemetry(level=level),
+        )
+
+    eng_on, eng_off = overhead_engine("default"), overhead_engine("counters")
+    for e2 in (eng_on, eng_off):  # populate the prefix cache once
+        timed_submit(e2, fresh_reqs(offset=300))
+    syncs0 = {
+        id(e2): e2.telemetry.registry.counter("device_syncs").value
+        for e2 in (eng_on, eng_off)
+    }
+    pairs = []
+    for k in range(5):
+        first, second = (eng_on, eng_off) if k % 2 == 0 else (eng_off, eng_on)
+        ta = timed_submit(first, fresh_reqs(offset=310 + 20 * k))
+        tb = timed_submit(second, fresh_reqs(offset=320 + 20 * k))
+        pairs.append((ta, tb) if first is eng_on else (tb, ta))
+    t_tel_on = min(t for t, _ in pairs)
+    t_tel_off = min(t for _, t in pairs)
+    telemetry_pair_ratio = min(t_on / t_off for t_on, t_off in pairs)
+    syncs_added = {
+        id(e2): e2.telemetry.registry.counter("device_syncs").value - syncs0[id(e2)]
+        for e2 in (eng_on, eng_off)
+    }
+    # structural guards: full telemetry adds zero device syncs and zero
+    # retraces relative to the counters-only engine on the same workload
+    telemetry_syncs_equal = syncs_added[id(eng_on)] == syncs_added[id(eng_off)]
+    telemetry_traces = sum(eng_on.trace_counts().values()) + sum(
+        eng_off.trace_counts().values()
+    )
 
     # ---- sequence forking: ONE prompt forked n ways (prompt pages shared
     # by refcount, divergent tails COW) vs the n-independent-requests
@@ -288,10 +340,18 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         "traces_timed": {
             "paged": traces_paged, "chunked": traces_chunked,
         },
-        "prefill_launch_ms": 1e3 * eng_ck.stats["t_prefill_s"] / launches,
-        "decode_tick_ms": 1e3 * eng_ck.stats["t_decode_s"] / dticks,
+        "prefill_launch_ms": 1e3 * tel_ck.h_prefill.mean(),
+        "decode_tick_ms": 1e3 * tel_ck.h_decode.mean(),
+        "prefill_launch_ms_max": 1e3 * (tel_ck.h_prefill.max or 0.0),
+        "decode_tick_ms_max": 1e3 * (tel_ck.h_decode.max or 0.0),
         "prefill_launches": eng_ck.stats["prefill_launches"],
         "prefill_chunks": eng_ck.stats["prefill_chunks"],
+        "tok_s_telemetry_on": toks / t_tel_on,
+        "tok_s_telemetry_off": toks / t_tel_off,
+        "telemetry_overhead_pct": 1e2 * (telemetry_pair_ratio - 1.0),
+        "telemetry_pair_ratio": telemetry_pair_ratio,
+        "telemetry_syncs_equal": telemetry_syncs_equal,
+        "telemetry_traces": telemetry_traces,
         "ticks_contig": ticks_c,
         "ticks_paged": ticks_p,
         "ticks_chunked": ticks_ck,
@@ -375,6 +435,13 @@ def bench(args) -> bool:
             and timed_traces == 0
             # forking must beat n independent requests on pages/sibling
             and r["fork_pages_per_sibling"] < r["fork_baseline_pages_per_sibling"]
+            # default-level telemetry rides the hot path for free:
+            # < 2% warm tok/s vs counters-only (best adjacent pair of 5:
+            # a real per-tick cost inflates every pair, CPU jitter
+            # doesn't), zero extra device syncs, zero extra traces
+            and r["telemetry_pair_ratio"] <= 1.02
+            and r["telemetry_syncs_equal"]
+            and r["telemetry_traces"] == 0
         )
         print(
             f"{r['kind']:6s} {str(r['match'] and r['match_chunked']):5s} "
@@ -392,6 +459,13 @@ def bench(args) -> bool:
             f"launches ({r['prefill_chunks']} chunks batched), decode tick "
             f"{r['decode_tick_ms']:.1f} ms; timed-pass retraces: {timed_traces} "
             f"(warmup paid {sum(r['traces_warmup'].values())})"
+        )
+        print(
+            f"{'':6s} telemetry overhead (default vs counters level): "
+            f"{r['tok_s_telemetry_on']:.1f} vs {r['tok_s_telemetry_off']:.1f} "
+            f"tok/s, best-pair overhead {r['telemetry_overhead_pct']:+.2f}% "
+            f"(syncs equal: {r['telemetry_syncs_equal']}, "
+            f"telemetry retraces: {r['telemetry_traces']})"
         )
         print(
             f"{'':6s} prefix-hit savings (warm pass, analytic): "

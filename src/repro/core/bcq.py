@@ -265,6 +265,40 @@ def fake_quant(x: jax.Array, codebooks: jax.Array, cfg: BCQConfig, s_x=None) -> 
     return out[..., : x.shape[-1]].astype(dt)
 
 
+@partial(jax.jit, static_argnames=("cfg",))
+def encode_stats(x: jax.Array, codebooks: jax.Array, cfg: BCQConfig, s_x=None):
+    """Online quantization-error stats of encoding ``x``: the NMSE of the
+    quantize-dequantize round trip and the per-codebook selector
+    occupancy (how often each cluster wins the per-block argmin of Eq. 4).
+
+    This is the telemetry probe behind ``Runtime.quant_probe``
+    (serving.telemetry.QuantProbeSink): it re-runs the encode path on the
+    raw activation, so it is opt-in — the serving fast path never pays
+    for it.  Returns (nmse f32 scalar, occupancy (N_c,) int32).  Padding
+    to a whole array is excluded from the NMSE but its (all-zero) blocks
+    do count toward occupancy, same as in the stored encoding."""
+    xf = x.astype(jnp.float32)
+    if s_x is None:
+        s_x = tensor_scale(xf, cfg)
+    xp, _ = pad_to_multiple(xf, cfg.array_len)
+    lead = xp.shape[:-1]
+    na = xp.shape[-1] // cfg.array_len
+    arrays = xp.reshape(*lead, na, cfg.array_len)
+    _, scale = _array_scales(arrays, cfg, s_x)
+    y = arrays * scale[..., None]
+    blocks = y.reshape(*lead, na, cfg.blocks_per_array, cfg.block_len)
+    sel, idx = _select_and_index(blocks, codebooks)
+    flat_cb = codebooks.reshape(-1)
+    vals = flat_cb[sel[..., None] * cfg.n_entries + idx]
+    xq = (vals.reshape(*lead, na, cfg.array_len) / scale[..., None]).reshape(
+        *lead, na * cfg.array_len
+    )[..., : x.shape[-1]]
+    occupancy = jnp.zeros((cfg.n_codebooks,), jnp.int32).at[
+        sel.reshape(-1)
+    ].add(1)
+    return quantization_nmse(xf, xq), occupancy
+
+
 def quantization_nmse(x: jax.Array, xq: jax.Array) -> jax.Array:
     x = x.astype(jnp.float32)
     d = x - xq.astype(jnp.float32)

@@ -30,6 +30,14 @@ only their divergent tail page.  ``--temperature T`` (with ``--top-k`` /
 (seed, sample index, position), so runs reproduce exactly; T=0 keeps the
 exact greedy path, making the fork degenerate (all siblings identical —
 useful for verifying page accounting without sampling noise).
+
+Telemetry (docs/OBSERVABILITY.md): ``--metrics-json PATH`` dumps the
+paged engine's full metrics snapshot (TTFT / ITL / queue-time
+histograms, pool + prefix gauges, per-request timelines);
+``--trace-out PATH`` writes the tick journal as Chrome-trace JSON
+(load in Perfetto or chrome://tracing); ``--quant-probes`` attaches the
+online LO-BCQ activation-quant probes (per-layer/site NMSE + codebook
+occupancy) to the W4A4 runtime.  Any of the three implies ``--paged``.
 """
 from __future__ import annotations
 
@@ -55,8 +63,19 @@ from repro.serving.generate import (  # noqa: F401 (re-export)
 )
 
 
+def _stat(snap: dict, name: str, default=0):
+    """Tolerant metric read from an engine snapshot(): counters first,
+    then gauges — a renamed or absent metric degrades to ``default``
+    instead of raising a KeyError mid-serve."""
+    for table in ("counters", "gauges"):
+        v = snap.get(table, {}).get(name)
+        if v is not None:
+            return v
+    return default
+
+
 def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int,
-                chunked: bool = False, prefill_chunk: int = 0):
+                chunked: bool = False, prefill_chunk: int = 0, telemetry=None):
     """Serve the prompt batch through the PagedEngine; returns (tokens, engine)."""
     from repro.serving.engine import PagedEngine
 
@@ -64,6 +83,7 @@ def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int
         api, params, n_slots=prompts.shape[0], max_len=max_len, page_size=page_size,
         chunked_prefill=chunked,
         prefill_chunk=prefill_chunk or 2 * page_size,
+        telemetry=telemetry,
     )
     for i in range(prompts.shape[0]):
         engine.submit(Request(rid=i, prompt=np.asarray(prompts[i]), max_new=gen_len - 1))
@@ -109,7 +129,20 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling seed — tokens are deterministic per "
                          "(seed, sample index, position)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the paged engine's metrics snapshot "
+                         "(histograms / gauges / timelines) as JSON; "
+                         "implies --paged")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the tick journal as Chrome-trace JSON "
+                         "(Perfetto / chrome://tracing); implies --paged")
+    ap.add_argument("--quant-probes", action="store_true",
+                    help="attach online LO-BCQ activation-quant probes "
+                         "(per-layer/site NMSE + codebook-cluster occupancy) "
+                         "to the W4A4 runtime; implies --paged")
     args = ap.parse_args()
+    if args.metrics_json or args.trace_out or args.quant_probes:
+        args.paged = True
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     bcq_cfg = BCQConfig()
@@ -117,9 +150,15 @@ def main():
     cb = cbs.as_jnp()
 
     rt_bf16 = Runtime(quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32)
+    probe_sink = None
+    if args.quant_probes:
+        from repro.serving.telemetry import QuantProbeSink
+
+        probe_sink = QuantProbeSink(n_layers=cfg.n_layers)
     rt_w4a4 = Runtime(
         quant_mode="fake", bcq_cfg=bcq_cfg, compute_dtype=jnp.float32,
         param_dtype=jnp.float32, cache_kind=args.cache,
+        quant_probe=probe_sink,
     )
     api = zoo.build(cfg, rt_bf16)
     api_q = zoo.build(cfg, rt_w4a4)
@@ -196,11 +235,12 @@ def main():
         out_c = {r.rid: r.out for r in fin_c}
         ref_c = jnp.asarray([out_c[i][: args.gen] for i in range(args.batch)], jnp.int32)
         match = bool(jnp.all(got_paged == ref_c))
+        snap = engine.snapshot()
         print(f"contig : {toks/t_c:8.1f} tok/s (slot-contiguous engine)")
         print(
             f"paged  : {toks/t_p:8.1f} tok/s (page={args.page_size}, "
-            f"pages used {engine.stats['peak_pages']}, "
-            f"prefix hits {engine.stats['prefix_hits']}) "
+            f"pages used {_stat(snap, 'pool_peak_pages', 'n/a')}, "
+            f"prefix hits {_stat(snap, 'prefix_hits')}) "
             f"outputs {'==' if match else '!='} contiguous engine"
         )
         if args.chunked_prefill:
@@ -216,14 +256,51 @@ def main():
             )
             t_ck = time.time() - t0
             agree_ck = float(jnp.mean((got_ck == ref_c).astype(jnp.float32)))
+            snap_ck = eng_ck.snapshot()
             print(
                 f"chunked: {toks/t_ck:8.1f} tok/s (prefill chunk="
                 f"{args.prefill_chunk or 2 * args.page_size}, "
-                f"{eng_ck.stats['prefill_chunks']} chunks, "
-                f"prefill tokens {eng_ck.stats['prefill_tokens']} run / "
-                f"{eng_ck.stats['prefill_tokens_skipped']} prefix-skipped) "
+                f"{_stat(snap_ck, 'prefill_chunks')} chunks, "
+                f"prefill tokens {_stat(snap_ck, 'prefill_tokens')} run / "
+                f"{_stat(snap_ck, 'prefill_tokens_skipped')} prefix-skipped) "
                 f"agreement vs contiguous {agree_ck*100:.1f}% "
                 "(W4A4 act s_X sees chunk-sized batches)"
+            )
+
+    if args.paged and (args.metrics_json or args.trace_out or args.quant_probes):
+        # telemetry artifacts come from the richest engine run above
+        # (chunked if it ran — its journal has per-chunk prefill spans)
+        src = eng_ck if args.chunked_prefill else engine
+        tel = src.telemetry
+        if args.metrics_json:
+            tel.dump_metrics(args.metrics_json, engine=src, probe_sink=probe_sink)
+            print(f"telemetry: metrics snapshot -> {args.metrics_json}")
+        if args.trace_out:
+            tel.dump_trace(args.trace_out)
+            print(f"telemetry: Chrome trace ({len(tel.journal)} events, "
+                  f"{tel.journal.dropped} dropped) -> {args.trace_out}")
+        hs = tel.registry.snapshot()["histograms"]
+        ttft, itl, qt = hs["ttft_s"], hs["itl_s"], hs["queue_time_s"]
+        print(
+            f"telemetry: ttft mean {ttft['mean']*1e3:.2f} ms (n={ttft['count']}), "
+            f"itl mean {itl['mean']*1e3:.2f} ms (n={itl['count']}), "
+            f"queue mean {qt['mean']*1e3:.2f} ms (n={qt['count']})"
+        )
+        if probe_sink is not None:
+            rep = probe_sink.report()
+            worst = sorted(
+                (
+                    (d["nmse_mean"], site, layer)
+                    for site, per in rep["sites"].items()
+                    for layer, d in per.items()
+                ),
+                reverse=True,
+            )[:3]
+            print(
+                f"quant-probes: {rep['emissions']} emissions over "
+                f"{len(rep['sites'])} sites × {rep['n_layers']} layers; "
+                "worst NMSE: "
+                + ", ".join(f"{s}/L{l}={m:.2e}" for m, s, l in worst)
             )
 
     if args.best_of > 1:
@@ -250,13 +327,13 @@ def main():
         by_rid: dict = {}
         for r in fin_f:
             by_rid.setdefault(r.rid, {})[r.sample_idx] = r.out
-        s = eng_f.stats
+        s = eng_f.snapshot()
         print(
             f"best-of: {args.batch * args.best_of * args.gen / t_f:8.1f} tok/s "
             f"({args.best_of} forked samples/prompt, T={args.temperature}, "
-            f"seed={args.seed}) — forks {s['forks']}, shared pages "
-            f"{s['shared_pages']}, COW copies {s['cow_copies']}, "
-            f"peak pages {s['peak_pages']} "
+            f"seed={args.seed}) — forks {_stat(s, 'forks')}, shared pages "
+            f"{_stat(s, 'shared_pages')}, COW copies {_stat(s, 'cow_copies')}, "
+            f"peak pages {_stat(s, 'pool_peak_pages', 'n/a')} "
             f"(n-independent would prefill {args.best_of}× and share nothing)"
         )
         if args.temperature == 0 and args.paged:

@@ -16,6 +16,7 @@ array living in the param tree), so a single model definition serves:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional
 
 import jax
@@ -77,6 +78,14 @@ class Runtime:
     # composition runs (bit-exact with the two-launch kernels).
     fused_linear: bool = True
     mesh: Any = None  # required (hashable) when flash_decode is set
+    # opt-in online quantization-error probe (serving telemetry): a
+    # host-side sink called as sink(site_tag, nmse, occupancy) via
+    # jax.debug.callback from every BCQ activation-encode site.  None
+    # (default) stages nothing — the serving graphs are unchanged.  The
+    # sink is compared/hashes by object identity, so two Runtimes with
+    # different sinks are distinct jit-static values (separate caches,
+    # no silent cross-engine probe sharing).
+    quant_probe: Any = None
 
 
 # ------------------------------------------------------------------- init
@@ -138,6 +147,30 @@ def _quantize_act(x, rt: "Runtime", cb):
     return fn(x)
 
 
+def _emit_quant_probe(x, rt: "Runtime", cb, tag) -> None:
+    """Report the would-be activation-quant error at one GEMM site.
+
+    Stages ``bcq.encode_stats`` over the RAW (pre-quantization)
+    activation and ships (nmse, selector occupancy) to the host sink via
+    an ordered ``jax.debug.callback`` — ordered so emissions arrive in
+    program order even from inside the backbone's ``lax.scan``, which is
+    what lets the sink attribute layers by arrival count.  Only fires for
+    the paper's BCQ activation quantizer (other act_formats have no
+    codebooks to occupy); no-op unless ``rt.quant_probe`` is set AND the
+    call site passed a tag (``qdense_shared`` tags once for its head
+    group and strips the tag from the per-head calls)."""
+    if rt.quant_probe is None or tag is None or cb is None:
+        return
+    if rt.quant_mode not in ("fake", "fake_full", "packed"):
+        return
+    if rt.act_format != "bcq":
+        return
+    nmse, occ = bcq.encode_stats(x.astype(jnp.float32), cb, rt.bcq_cfg)
+    jax.debug.callback(
+        functools.partial(rt.quant_probe, tag), nmse, occ, ordered=True
+    )
+
+
 def decode_packed_weight(pk: dict, cfg: BCQConfig, cb: jax.Array) -> jax.Array:
     """In-graph dequant of a packed (..., N, K) weight: storage stays 4-bit
     in HBM; decode is gather + multiply (the jnp analogue of the Pallas
@@ -193,7 +226,7 @@ def packed_weight_shapes(d_in: int, d_out: int, cfg: BCQConfig) -> dict:
     }
 
 
-def qdense_shared(x, ps: list, rt: Runtime, cb):
+def qdense_shared(x, ps: list, rt: Runtime, cb, tag=None):
     """Several linear heads over the SAME input (QKV, MLP wi/wg): quantize
     the activation ONCE and reuse — bit-identical to per-head quantization
     (same xq), but 1× instead of N× encode cost/traffic.
@@ -203,7 +236,12 @@ def qdense_shared(x, ps: list, rt: Runtime, cb):
     anyway — same x, same dynamic s_X — and never round-trips HBM).  The
     fused kernel implements the paper's BCQ activation quantizer only, so
     other act_formats ('none' = W4A16, mx4/…) keep the pre-quantized
-    decode+einsum path."""
+    decode+einsum path.
+
+    ``tag`` names this head group for the opt-in quant-error probe —
+    emitted ONCE here (the heads share one activation encode), with the
+    per-head qdense calls untagged so the probe never double-counts."""
+    _emit_quant_probe(x, rt, cb, tag)
     if (
         rt.quant_mode == "packed" and rt.fused_linear
         and rt.act_format == "bcq" and cb is not None
@@ -216,8 +254,12 @@ def qdense_shared(x, ps: list, rt: Runtime, cb):
     return [qdense(x, p, rt, cb) for p in ps]
 
 
-def qdense(x, p, rt: Runtime, cb: Optional[jax.Array]):
-    """Linear layer honoring rt.quant_mode.  x: (..., K); kernel (K, N)."""
+def qdense(x, p, rt: Runtime, cb: Optional[jax.Array], tag=None):
+    """Linear layer honoring rt.quant_mode.  x: (..., K); kernel (K, N).
+    ``tag`` (optional) names the site for the quant-error probe; callers
+    routing through qdense_shared leave it None (already probed)."""
+    if rt.act_format != "_pre_quantized":
+        _emit_quant_probe(x, rt, cb, tag)
     dt = rt.compute_dtype
     if rt.act_format == "_pre_quantized" and rt.quant_mode != "none" and cb is not None:
         # input already quantized by qdense_shared
@@ -721,7 +763,7 @@ def attention(
     b, s, _ = x.shape
     hd = cfg.head_dim
     if kv_override is None:
-        q, k, v = qdense_shared(x, [p["wq"], p["wk"], p["wv"]], rt, cb)
+        q, k, v = qdense_shared(x, [p["wq"], p["wk"], p["wv"]], rt, cb, tag="attn_qkv")
         q = q.reshape(b, s, cfg.n_heads, hd)
         k = k.reshape(b, s, cfg.n_kv_heads, hd)
         v = v.reshape(b, s, cfg.n_kv_heads, hd)
@@ -729,7 +771,7 @@ def attention(
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
     else:
-        q = qdense(x, p["wq"], rt, cb).reshape(b, s, cfg.n_heads, hd)
+        q = qdense(x, p["wq"], rt, cb, tag="attn_q").reshape(b, s, cfg.n_heads, hd)
         k, v = kv_override
 
     if paged is not None and len(paged) >= 4:
@@ -757,7 +799,7 @@ def attention(
                 q, kf, vf, positions, (n_past + s).reshape(b, 1, 1, 1), causal,
                 window, rt.attn_chunk, rt.unroll, rt.attn_f32,
             )
-        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb, tag="attn_out")
         return out, new_pool
 
     if paged is not None:
@@ -782,7 +824,7 @@ def attention(
                 q, kf, vf, positions, valid.reshape(b, 1, 1, 1), causal, window,
                 rt.attn_chunk, rt.unroll, rt.attn_f32,
             )
-        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+        out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb, tag="attn_out")
         return out, new_pool
 
     new_cache = None
@@ -810,7 +852,7 @@ def attention(
             out = flash_attention(q, k, v, causal=True).astype(q.dtype)
         else:
             out = _attend_chunked(q, k, v, positions, valid, causal, window, rt.attn_chunk, rt.unroll, rt.attn_f32)
-    out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb)
+    out = qdense(out.reshape(b, s, cfg.n_heads * hd), p["wo"], rt, cb, tag="attn_out")
     return out, new_cache
 
 
@@ -825,9 +867,9 @@ def init_mlp(key, d_model, d_ff, act, rt: Runtime):
 
 def mlp(x, p, act, rt: Runtime, cb):
     if act == "swiglu":
-        h, g = qdense_shared(x, [p["wi"], p["wg"]], rt, cb)
+        h, g = qdense_shared(x, [p["wi"], p["wg"]], rt, cb, tag="mlp_in")
         h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
     else:
-        h = qdense(x, p["wi"], rt, cb)
+        h = qdense(x, p["wi"], rt, cb, tag="mlp_in")
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
-    return qdense(h, p["wo"], rt, cb)
+    return qdense(h, p["wo"], rt, cb, tag="mlp_out")

@@ -40,8 +40,11 @@ def init_moe(key, cfg, rt: Runtime):
     }
 
 
-def _expert_matmul(xe, wp, rt: Runtime, cb):
-    """xe: (E, C, K) tokens per expert; weight (E, K, N) → (E, C, N)."""
+def _expert_matmul(xe, wp, rt: Runtime, cb, tag=None):
+    """xe: (E, C, K) tokens per expert; weight (E, K, N) → (E, C, N).
+    ``tag`` names the site for the opt-in quant-error probe (stats pool
+    every expert's tokens, matching the shared per-tensor s_X)."""
+    layers._emit_quant_probe(xe, rt, cb, tag)
     dt = rt.compute_dtype
     if rt.quant_mode == "none" or cb is None:
         return jnp.einsum("eck,ekn->ecn", xe.astype(dt), wp["kernel"].astype(dt))
@@ -114,10 +117,10 @@ def moe_ffn(x, p, cfg, rt: Runtime, cb):
     xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
     xe = xpad[idx_ec]  # (E, C, D) — gather across the data↔model axes (A2A)
 
-    h = _expert_matmul(xe, p["wi"], rt, cb)
-    g = _expert_matmul(xe, p["wg"], rt, cb)
+    h = _expert_matmul(xe, p["wi"], rt, cb, tag="moe_wi")
+    g = _expert_matmul(xe, p["wg"], rt, cb, tag="moe_wg")
     h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
-    ye = _expert_matmul(h, p["wo"], rt, cb)  # (E, C, D)
+    ye = _expert_matmul(h, p["wo"], rt, cb, tag="moe_wo")  # (E, C, D)
 
     # combine: gather each pair's output and scatter-add into tokens
     # (dropped pairs read a clipped slot but are zeroed by ``keep``)

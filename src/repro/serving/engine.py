@@ -94,6 +94,7 @@ from repro.serving.generate import (
 )
 from repro.serving.pages import NULL_PAGE, PagePool, live_pages, pages_needed
 from repro.serving.prefix import PrefixCache, chunk_hashes
+from repro.serving.telemetry import ENGINE_STAT_KEYS, StatsView, Telemetry
 
 
 class PromptTooLongError(ValueError):
@@ -157,6 +158,7 @@ class PagedEngine:
         chunked_prefill: bool = False,
         prefill_chunk: int = 16,
         profile_sync: bool = False,
+        telemetry: Optional[Telemetry] = None,
     ):
         assert api.paged_decode_fn is not None, "family has no paged serving path"
         assert max_len % page_size == 0, "page_size must divide max_len"
@@ -217,17 +219,24 @@ class PagedEngine:
             )
         self._trace_counters = {"prefill": c_pre, "decode": c_dec, "chunk": c_chunk}
         self._trace_base = {k: v["traces"] for k, v in self._trace_counters.items()}
-        self.stats = {
-            "prefix_hits": 0, "prefix_misses": 0, "preemptions": 0,
-            "prefix_evictions": 0, "peak_pages": 0, "decode_ticks": 0,
-            "prefill_chunks": 0, "prefill_tokens": 0,
-            "prefill_tokens_skipped": 0, "prefill_launches": 0,
-            "forks": 0, "cow_copies": 0, "shared_pages": 0,
-            # per-tick latency split (wall-clock around each launch,
-            # synced on the logits; includes trace time on a cold shape —
-            # warm up first for steady-state numbers)
-            "t_prefill_s": 0.0, "t_decode_s": 0.0,
+        # telemetry: registry counters replace the old hand-maintained
+        # stats dict; ``self.stats`` stays readable as a Mapping view with
+        # the same keys/values (peak_pages reads the PagePool's own
+        # high-water mark).  The t_prefill_s / t_decode_s counters keep
+        # the per-tick latency split semantics (wall-clock around each
+        # launch, synced on the logits; includes trace time on a cold
+        # shape — warm up first for steady-state numbers).
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        _reg = self.telemetry.registry
+        self._c = {
+            k: _reg.counter(k) for k in ENGINE_STAT_KEYS if k != "peak_pages"
         }
+        self._c["t_prefill_s"].unit = "s"
+        self._c["t_decode_s"].unit = "s"
+        # every block_until_ready on the serving path counts here — the
+        # telemetry-overhead guard asserts the default level adds none
+        self._c_syncs = _reg.counter("device_syncs")
+        self.stats = StatsView(self)
 
     def trace_counts(self, since_init: bool = True) -> dict:
         """Traces of the prefill / decode / chunk step functions.  The
@@ -256,6 +265,7 @@ class PagedEngine:
             req.done = True
             self.finished.append(req)
             return
+        self.telemetry.on_submit(req, time.perf_counter())
         self.queue.append(req)
 
     def _too_long_msg(self, plen: int) -> str:
@@ -275,10 +285,11 @@ class PagedEngine:
             victim = self.prefix.evict_one()
             if victim is None:
                 return None
-            self.stats["prefix_evictions"] += 1
+            self._c["prefix_evictions"].inc()
+            self.telemetry.instant("prefix_evict", page=int(victim))
             self.pool_mgr.release(victim)
             pid = self.pool_mgr.alloc()
-        self.stats["peak_pages"] = max(self.stats["peak_pages"], self.pool_mgr.used())
+        # (peak tracking lives in PagePool.alloc — see pages.PagePool.peak)
         return pid
 
     def _drop_page(self, pid: int):
@@ -361,8 +372,8 @@ class PagedEngine:
         produce the prompt's last-position logits).  Counting misses over
         all prompt pages instead used to report a 50% hit rate for a
         100%-warm resubmission of a 17-token prompt at page_size=16."""
-        self.stats["prefix_hits"] += len(hits)
-        self.stats["prefix_misses"] += max(0, n_cacheable - len(hits))
+        self._c["prefix_hits"].inc(len(hits))
+        self._c["prefix_misses"].inc(max(0, n_cacheable - len(hits)))
         for i, (h, pid) in enumerate(zip(hashes, hits)):
             claimed = self.prefix.lookup(h)  # unparks the reclaimable page
             assert claimed == pid
@@ -405,15 +416,20 @@ class PagedEngine:
         # then scatter the missed pages; shared pages are never rewritten.
         tokens = jnp.asarray(prompt, jnp.int32)[None, :]
         t0 = time.perf_counter()
+        self.telemetry.on_admit(req, t0)
         logits, cache1 = self._prefill(self.params, tokens)
         logits = jax.block_until_ready(logits)
-        self.stats["t_prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_launches"] += 1
+        self._c_syncs.inc()
+        t1 = time.perf_counter()
+        self._c["t_prefill_s"].inc(t1 - t0)
+        self._c["prefill_launches"].inc()
+        self.telemetry.prefill_launch(t0, t1, slots=1, tokens=plen)
+        self.telemetry.on_chunk(req, t0, t1, plen)  # whole prompt, one chunk
         self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
         if self.prefix_caching:
             for i in range(len(hits), n_full):
                 self.prefix.register(hashes[i], int(table[i]))
-        self.stats["prefill_tokens"] += plen
+        self._c["prefill_tokens"].inc(plen)
 
         self.tables[slot_idx] = table
         self.slots[slot_idx] = _PagedSlot(req=req, pos=plen, admit_seq=self._admit_counter)
@@ -437,7 +453,8 @@ class PagedEngine:
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
         # cacheable = full pages minus the hit deliberately trimmed above
         self._claim_hits(hashes, hits, (plen - 1) // self.ps, table)
-        self.stats["prefill_tokens_skipped"] += len(hits) * self.ps
+        self._c["prefill_tokens_skipped"].inc(len(hits) * self.ps)
+        self.telemetry.on_admit(req, time.perf_counter())
 
         self.tables[slot_idx] = table
         self.slots[slot_idx] = _PagedSlot(
@@ -470,6 +487,7 @@ class PagedEngine:
         req = slot.req
         if len(req.out) >= req.max_new + 1:
             req.done = True
+            self.telemetry.on_finish(req, time.perf_counter())
             self.finished.append(req)
             self._free_slot(i)
             return True
@@ -499,12 +517,14 @@ class PagedEngine:
         tail page COWs it in ``_ensure_tail_page``."""
         slot = self.slots[i]
         parent = slot.req
+        now = time.perf_counter()
         greedy_tok = int(next_greedy_tokens(logits)[0])
         row = None if parent.sampling.greedy else logits[0, -1, :]
         if parent.n_samples == 1:
             tok = pick_token(row, greedy_tok, parent, slot.pos)
             parent.out.append(tok)
             self._next_tok[i] = tok
+            self.telemetry.on_first_token(parent, now)
             self._finish_if_budget_spent(i)
             return
         # sibling slots: the ones chunked admission reserved for this
@@ -535,6 +555,7 @@ class PagedEngine:
                     rid=parent.rid, prompt=parent.prompt, max_new=parent.max_new,
                     sampling=parent.sampling, sample_idx=s_idx,
                 )
+                self.telemetry.on_fork_child(parent, child, now)
                 for pid in shared:
                     self.pool_mgr.ref(pid)  # one ref per sibling per page
                 self.tables[j] = self.tables[i]
@@ -543,8 +564,8 @@ class PagedEngine:
                 )
                 self._admit_counter += 1
             children.append((j, child))
-        self.stats["forks"] += 1
-        self.stats["shared_pages"] += len(shared) * (n - 1)
+        self._c["forks"].inc()
+        self._c["shared_pages"].inc(len(shared) * (n - 1))
         # emit first tokens only after every sibling holds its refs — a
         # budget-spent sibling retiring here must not free pages that the
         # remaining siblings still share
@@ -552,6 +573,7 @@ class PagedEngine:
             tok = pick_token(row, greedy_tok, child, self.slots[j].pos)
             child.out.append(tok)
             self._next_tok[j] = tok
+            self.telemetry.on_first_token(child, now)
             self._finish_if_budget_spent(j)
 
     # ------------------------------------------------------- preemption
@@ -586,10 +608,16 @@ class PagedEngine:
             sampling=req.sampling,
             n_samples=req.n_samples,
             sample_idx=req.sample_idx,
+            # same timeline object: the resumed request reports ONE submit,
+            # another admit on re-entry, TTFT from the original submit
+            timeline=req.timeline,
         )
         self._free_slot(victim)
         self.queue.appendleft(resumed)
-        self.stats["preemptions"] += 1
+        self._c["preemptions"].inc()
+        now = time.perf_counter()
+        self.telemetry.on_preempt(resumed, now)
+        self.telemetry.instant("preempt", now, rid=int(req.rid), slot=victim)
         return victim
 
     def _alloc_page_preempting(self, i: int) -> Optional[int]:
@@ -631,7 +659,8 @@ class PagedEngine:
             if new is None:
                 return False
             self.pool = self._copy_page(self.pool, pid, new)
-            self.stats["cow_copies"] += 1
+            self._c["cow_copies"].inc()
+            self.telemetry.instant("cow_copy", src=int(pid), dst=int(new))
             self._drop_page(pid)  # source may have hit refcount 0 meanwhile
             self.tables[i][pi] = new
         return True
@@ -716,15 +745,21 @@ class PagedEngine:
             # Mid-prompt ticks skip the sync to keep host/device overlap
             # unless profile_sync asks for an exact split.
             logits = jax.block_until_ready(logits)
-        self.stats["t_prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_launches"] += 1
+            self._c_syncs.inc()
+        t1 = time.perf_counter()
+        self._c["t_prefill_s"].inc(t1 - t0)
+        self._c["prefill_launches"].inc()
+        self.telemetry.prefill_launch(
+            t0, t1, slots=len(batch), tokens=int(sum(plans[i][1] for i in batch))
+        )
 
         for r, i in enumerate(batch):
             start, c, _ = plans[i]
             slot = self.slots[i]
             slot.pos = start + c
-            self.stats["prefill_chunks"] += 1
-            self.stats["prefill_tokens"] += c
+            self._c["prefill_chunks"].inc()
+            self._c["prefill_tokens"].inc(c)
+            self.telemetry.on_chunk(slot.req, t0, t1, c)
             if self.prefix_caching:
                 first_page = start // self.ps
                 for p in range(first_page, min(slot.pos // self.ps, len(slot.hashes))):
@@ -777,8 +812,11 @@ class PagedEngine:
             jnp.asarray(lengths, jnp.int32),
         )
         logits = jax.block_until_ready(logits)
-        self.stats["t_decode_s"] += time.perf_counter() - t0
-        self.stats["decode_ticks"] += 1
+        self._c_syncs.inc()
+        t1 = time.perf_counter()
+        self._c["t_decode_s"].inc(t1 - t0)
+        self._c["decode_ticks"].inc()
+        self.telemetry.decode_tick(t0, t1, n_active=len(active))
         nxt = np.asarray(next_greedy_tokens(logits))
         last = None  # last-position logits: ONE device→host fetch when any
         # slot samples (indexing per slot on-device issued one tiny
@@ -798,11 +836,13 @@ class PagedEngine:
             )
             slot.req.out.append(tok)
             slot.pos += 1
+            self.telemetry.on_token(slot.req, t1)
             if sequence_finished(
                 tok, len(slot.req.out), slot.req.max_new, slot.pos,
                 self._seq_capacity() if self.chunked else self.max_len, self.eos
             ):
                 slot.req.done = True
+                self.telemetry.on_finish(slot.req, t1)
                 self.finished.append(slot.req)
                 self._free_slot(i)
             else:
@@ -825,3 +865,12 @@ class PagedEngine:
     # ------------------------------------------------------------ metrics
     def cache_pages_in_use(self) -> int:
         return self.pool_mgr.used()
+
+    def snapshot(self) -> dict:
+        """One JSON-able dump of everything the engine knows about itself:
+        registry counters / gauges / histograms, trace counts, journal
+        health, and per-request timeline summaries.  Readers should index
+        the nested dicts with ``.get(..., default)`` so a renamed or
+        absent metric degrades to a default instead of a KeyError
+        mid-serve (see launch/serve.py)."""
+        return self.telemetry.snapshot(engine=self)

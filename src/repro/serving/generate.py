@@ -71,6 +71,13 @@ class Request:
     n_samples: int = 1
     sample_idx: int = 0
     error: Optional[str] = None
+    # telemetry lifecycle timeline (serving.telemetry.RequestTimeline) —
+    # attached at submit(), carried through preemption/resubmission so the
+    # resumed request keeps its original submit timestamp (TTFT spans the
+    # preemption); None when telemetry runs at counters-only level
+    timeline: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # engine-private memo: (page_size, chunk_hashes(prompt)) — a request
     # blocked at the admission watermark is re-planned every tick and must
     # not re-digest its whole (immutable) prompt each time

@@ -56,6 +56,10 @@ class PagePool:
         assert self.n_pages >= 2, "need at least the null page + one real page"
         self.free: list[int] = list(range(self.n_pages - 1, 0, -1))
         self.refcount = np.zeros(self.n_pages, np.int32)
+        # high-water mark of used() — owned HERE so every allocation path
+        # (engine, future fork/COW refactors, direct pool users) updates
+        # it; the telemetry gauge reads this, not an engine-side shadow
+        self.peak = 0
 
     # -------------------------------------------------------------- alloc
     def available(self) -> int:
@@ -68,6 +72,10 @@ class PagePool:
         pid = self.free.pop()
         assert self.refcount[pid] == 0
         self.refcount[pid] = 1
+        # used() only ever grows through alloc() (revive() re-activates a
+        # parked page that already counts as used), so this is the one
+        # place the high-water mark can advance
+        self.peak = max(self.peak, self.used())
         return pid
 
     def ref(self, pid: int) -> None:

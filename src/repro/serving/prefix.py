@@ -118,3 +118,10 @@ class PrefixCache:
 
     def reclaimable_count(self) -> int:
         return len(self.reclaimable)
+
+    def snapshot(self) -> dict:
+        """Telemetry-facing gauge values (docs/OBSERVABILITY.md)."""
+        return {
+            "registered_pages": len(self.by_hash),
+            "reclaimable_pages": len(self.reclaimable),
+        }

@@ -1,0 +1,318 @@
+"""Telemetry subsystem: metric registry semantics, pinned histogram
+bucket layouts, Chrome-trace journal schema, request timelines under
+preemption and forking, quant-probe attribution, and the overhead
+guards (default-level telemetry adds zero traces and zero device
+syncs to the serving hot path)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke
+from repro.core.bcq import BCQConfig
+from repro.core.calibrate import default_universal_codebooks
+from repro.models import zoo
+from repro.models.layers import Runtime
+from repro.serving.engine import PagedEngine
+from repro.serving.events import TID_DEVICE, TID_HOST, TraceJournal
+from repro.serving.generate import Request, SamplingParams
+from repro.serving.telemetry import (
+    ENGINE_STAT_KEYS,
+    ITL_BUCKETS,
+    LAUNCH_BUCKETS,
+    NMSE_BUCKETS,
+    QUEUE_BUCKETS,
+    TTFT_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+    QuantProbeSink,
+    Telemetry,
+)
+
+CFG = get_smoke("gpt3_126m")
+CB = default_universal_codebooks(BCQConfig()).as_jnp()
+MAX_LEN, PS = 32, 8
+
+
+@pytest.fixture(scope="module")
+def api_params():
+    rt = Runtime(
+        quant_mode="none", compute_dtype=jnp.float32, param_dtype=jnp.float32,
+        cache_kind="bf16",
+    )
+    api = zoo.build(CFG, rt)
+    params = api.init(jax.random.PRNGKey(0))
+    params["codebooks"] = CB
+    return api, params
+
+
+def _prompts(lengths=(5, 9, 7)):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, CFG.vocab, size=n).astype(np.int32) for n in lengths]
+
+
+def _run(engine, prompts, n_new):
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new=n_new))
+    finished, _ = engine.run_to_completion()
+    return {r.rid: r for r in finished}
+
+
+# ----------------------------------------------------------- registry units
+def test_histogram_bucket_edges_pinned():
+    """Dashboards key on these exact edges — changing them is a schema
+    break, not a tweak."""
+    assert TTFT_BUCKETS == (
+        0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+        2.5, 5.0, 10.0,
+    )
+    assert ITL_BUCKETS == (
+        0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+    )
+    assert QUEUE_BUCKETS == (
+        0.0001, 0.001, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 30.0,
+    )
+    assert LAUNCH_BUCKETS == ITL_BUCKETS
+    assert NMSE_BUCKETS == (
+        1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0,
+    )
+
+
+def test_histogram_observe_and_snapshot():
+    h = Histogram("x", (1.0, 2.0, 4.0), unit="s")
+    for v in (0.5, 1.0, 1.5, 3.0, 100.0):
+        h.observe(v)
+    # edges are EXCLUSIVE upper bounds (bisect_right): a value equal to
+    # an edge lands in the next bucket — [-inf,1) [1,2) [2,4) [4,+inf)
+    assert h.counts == [1, 2, 1, 1]
+    assert h.count == 5 and h.sum == pytest.approx(106.0)
+    assert h.mean() == pytest.approx(21.2)
+    assert (h.min, h.max) == (0.5, 100.0)
+    s = h.snapshot()
+    assert s["buckets"] == [1.0, 2.0, 4.0] and s["counts"] == [1, 2, 1, 1]
+    assert s["unit"] == "s" and s["count"] == 5
+    assert Histogram("y", (1.0,)).mean() == 0.0  # empty: no div-by-zero
+
+
+def test_registry_get_or_create_and_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    c.inc()
+    c.inc(3)
+    assert reg.counter("hits") is c and c.value == 4
+    reg.gauge("depth").set(7)
+    h = reg.histogram("lat", (0.1, 1.0), "s")
+    assert reg.histogram("lat", (0.1, 1.0), "s") is h
+    with pytest.raises(AssertionError):  # silently changing edges is a bug
+        reg.histogram("lat", (0.5, 1.0))
+    snap = reg.snapshot()
+    assert snap["counters"]["hits"] == 4
+    assert snap["gauges"]["depth"] == 7
+    assert snap["histograms"]["lat"]["buckets"] == [0.1, 1.0]
+
+
+# ------------------------------------------------------------ trace journal
+def test_journal_chrome_trace_schema_and_ring():
+    j = TraceJournal(capacity=4)
+    j.span("tick", 1.0, 1.5, args={"n": 1})
+    j.instant("evt", 1.2)
+    for k in range(4):  # overflow the ring: the two oldest records drop
+        j.span("tick", 2.0 + k, 2.4 + k)
+    assert len(j) == 4 and j.total == 6 and j.dropped == 2
+    # the first span and the instant fell off the ring: only the 4
+    # youngest tick spans remain
+    assert j.counts() == {"tick": 4}
+
+    doc = j.to_chrome_trace()
+    json.loads(json.dumps(doc))  # chrome://tracing requires plain JSON
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta if m["name"] == "thread_name"} \
+        == {"host scheduling", "device launches"}
+    real = [e for e in evs if e["ph"] != "M"]
+    # ts is µs relative to the earliest retained event and monotonic
+    assert all(e["ts"] >= 0 for e in real)
+    assert [e["ts"] for e in real] == sorted(e["ts"] for e in real)
+    # every B has its E: per-thread begin/end depth balances and never
+    # goes negative in the sorted stream (Perfetto's own invariant)
+    depth: dict = {}
+    for e in real:
+        if e["ph"] == "B":
+            depth[e["tid"]] = depth.get(e["tid"], 0) + 1
+        elif e["ph"] == "E":
+            depth[e["tid"]] = depth.get(e["tid"], 0) - 1
+            assert depth[e["tid"]] >= 0
+    assert all(d == 0 for d in depth.values())
+    assert sum(1 for e in real if e["ph"] == "B") == 4
+    assert doc["otherData"]["dropped"] == 2
+
+
+def test_journal_disabled_records_nothing():
+    j = TraceJournal(capacity=4, enabled=False)
+    j.span("tick", 1.0, 2.0)
+    j.instant("evt")
+    assert len(j) == 0 and j.total == 0
+    # only the process/thread-name metadata preamble remains
+    assert all(e["ph"] == "M" for e in j.to_chrome_trace()["traceEvents"])
+
+
+def test_counters_level_hooks_are_noops():
+    tel = Telemetry(level="counters")
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), max_new=2)
+    tel.on_submit(req, 1.0)
+    assert req.timeline is None and len(tel.timelines) == 0
+    tel.prefill_launch(1.0, 2.0)
+    tel.decode_tick(2.0, 3.0)
+    assert tel.h_prefill.count == 0 and tel.h_decode.count == 0
+    assert len(tel.journal) == 0
+
+
+# -------------------------------------------------------------- quant probe
+def test_quant_probe_layer_attribution():
+    """Ordered emissions: layer = arrival count mod n_layers per site."""
+    sink = QuantProbeSink(n_layers=2)
+    occ = np.array([3, 1], np.int32)
+    for nmse in (1.0, 2.0, 3.0, 4.0):  # two launches × two layers
+        sink("mlp_in", nmse, occ)
+    rep = sink.report()
+    per = rep["sites"]["mlp_in"]
+    assert per["0"]["count"] == 2 and per["0"]["nmse_mean"] == pytest.approx(2.0)
+    assert per["1"]["count"] == 2 and per["1"]["nmse_max"] == 4.0
+    assert per["0"]["cluster_occupancy"] == [6, 2]
+    assert rep["emissions"] == 4 and sink.total_emissions == 4
+    assert rep["nmse_histogram"]["count"] == 4
+
+
+def test_quant_probe_sampling_decimates_launches():
+    sink = QuantProbeSink(n_layers=2, sample_every=2)
+    for k in range(6):  # launches 0,1,2 — launch 1 decimated
+        sink("s", float(k), np.array([1], np.int32))
+    rep = sink.report()["sites"]["s"]
+    assert rep["0"]["count"] == 2 and rep["1"]["count"] == 2
+    assert sink.total_emissions == 6  # decimation bounds aggregation, not seen
+
+
+# ----------------------------------------------------------- engine wiring
+def test_stats_view_and_snapshot_schema(api_params):
+    api, params = api_params
+    eng = PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS)
+    fin = _run(eng, _prompts(), 4)
+    assert len(fin) == 3
+
+    # legacy stats surface: Mapping over exactly the historical keys
+    assert set(dict(eng.stats)) == set(ENGINE_STAT_KEYS)
+    assert eng.stats["peak_pages"] == eng.pool_mgr.peak > 0
+    assert eng.stats["decode_ticks"] > 0
+    with pytest.raises(KeyError):
+        eng.stats["no_such_stat"]
+
+    snap = eng.snapshot()
+    assert snap["schema"] == 1 and snap["level"] == "default"
+    for key in ("counters", "gauges", "histograms", "trace_counts",
+                "journal", "timelines"):
+        assert key in snap, key
+    assert snap["gauges"]["pool_peak_pages"] == eng.pool_mgr.peak
+    assert snap["counters"]["device_syncs"] > 0
+    json.dumps(snap)  # the --metrics-json payload must be JSON-able
+
+    # per-request timelines: every request one timeline, sane latencies
+    tls = {tl.rid: tl for tl in eng.telemetry.timelines}
+    assert set(tls) == set(fin)
+    for rid, r in fin.items():
+        tl = tls[rid]
+        assert tl.n_tokens == len(r.out)
+        assert len(tl.admits) == 1 and tl.preemptions == 0
+        assert tl.ttft() is not None and tl.ttft() >= 0
+        assert tl.tpot() is not None and tl.tpot() >= 0
+        assert tl.t_finish >= tl.t_first >= tl.t_submit
+    hist = snap["histograms"]
+    assert hist["ttft_s"]["count"] == 3
+    assert hist["decode_tick_s"]["count"] == eng.stats["decode_ticks"]
+
+    # the journal replays the run as paired spans
+    doc = eng.telemetry.journal.to_chrome_trace()
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "B"}
+    assert "decode_tick" in names
+
+
+def test_default_level_adds_no_traces_or_syncs(api_params):
+    """Same warm workload, default vs counters telemetry: identical jit
+    trace counts (zero) and identical device-sync counts — the detailed
+    level reuses the engine's existing measurement points."""
+    api, params = api_params
+    # warm every shape bucket (throwaway engine; jitted fns shared per api)
+    _run(PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS),
+         _prompts(), 4)
+
+    syncs = {}
+    for level in ("default", "counters"):
+        eng = PagedEngine(api, params, n_slots=2, max_len=MAX_LEN,
+                          page_size=PS, telemetry=Telemetry(level=level))
+        _run(eng, _prompts(), 4)
+        assert sum(eng.trace_counts().values()) == 0, level
+        syncs[level] = eng.telemetry.registry.counter("device_syncs").value
+    assert syncs["default"] == syncs["counters"] > 0
+
+    # counters level keeps the stats surface but skips the detail
+    assert len(eng.telemetry.timelines) == 0
+    assert len(eng.telemetry.journal) == 0
+    assert eng.stats["decode_ticks"] > 0
+
+
+def test_preemption_timeline_single_submit_two_admits(api_params):
+    """A preempted-and-resumed request keeps ONE timeline: one submit,
+    an admit per (re)admission, TTFT measured from the original submit."""
+    api, params = api_params
+    eng = PagedEngine(api, params, n_slots=2, max_len=MAX_LEN, page_size=PS,
+                      n_pages=6, watermark=1)
+    fin = _run(eng, _prompts((9, 7)), 10)
+    assert eng.stats["preemptions"] >= 1
+    assert len(fin) == 2
+
+    tls = [tl for tl in eng.telemetry.timelines]
+    assert len(tls) == 2  # resubmission reuses the timeline — no duplicate
+    assert len({tl.rid for tl in tls}) == 2
+    for tl in tls:  # every emitted token counted, preempted or not
+        assert tl.n_tokens == len(fin[tl.rid].out)
+    pre = [tl for tl in tls if tl.preemptions > 0]
+    assert pre, "forced preemption left no preempted timeline"
+    for tl in pre:
+        assert len(tl.admits) == 1 + tl.preemptions
+        assert tl.admits == sorted(tl.admits)
+        # TTFT spans the preemption: anchored at the ORIGINAL submission
+        assert tl.ttft() == pytest.approx(tl.t_first - tl.t_submit)
+        assert tl.t_submit <= tl.admits[0] <= tl.t_first
+    # queue time observed once per admission, preempted or not
+    total_admits = sum(len(tl.admits) for tl in tls)
+    assert eng.telemetry.h_queue.count == total_admits
+
+
+def test_fork_timelines_independent_with_shared_prefill(api_params):
+    """Forked siblings: independent timelines (own tokens/TTFT) that share
+    the parent's prefill-span list — one prefill served every sibling."""
+    api, params = api_params
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, CFG.vocab, size=PS + 3).astype(np.int32)
+    eng = PagedEngine(api, params, n_slots=3, max_len=MAX_LEN, page_size=PS)
+    eng.submit(Request(rid=0, prompt=prompt, max_new=4, n_samples=3,
+                       sampling=SamplingParams(temperature=0.8, seed=11)))
+    finished, _ = eng.run_to_completion()
+    assert len(finished) == 3 and all(r.error is None for r in finished)
+
+    tls = list(eng.telemetry.timelines)
+    assert len(tls) == 3
+    parent = next(tl for tl in tls if tl.sample_idx == 0)
+    children = [tl for tl in tls if tl.sample_idx != 0]
+    assert len(children) == 2
+    for ch in children:
+        assert ch is not parent
+        assert ch.prefill_spans is parent.prefill_spans  # shared by design
+        assert ch.t_submit == parent.t_submit  # sibling existed at submit
+        assert ch.ttft() is not None
+    # each sibling decodes its own tokens on its own timeline
+    out_by_sample = {r.sample_idx: r.out for r in finished}
+    for tl in tls:
+        assert tl.n_tokens == len(out_by_sample[tl.sample_idx])
+    assert eng.telemetry.h_ttft.count == 3
