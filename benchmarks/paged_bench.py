@@ -37,6 +37,11 @@ Columns (per cache kind, in ``BENCH_paged.json``):
   ``telemetry_overhead_pct`` — the same warm workload with full
   ("default") telemetry vs counters-only; the acceptance bar is < 2%
   overhead, zero extra device syncs, zero extra traces,
+* ``tok_s_guards_on`` / ``tok_s_guards_off`` / ``guard_overhead_pct`` —
+  the same warm workload with the robustness guards armed (NaN logits
+  guard + invariant audit every 4 ticks, docs/ROBUSTNESS.md) vs both
+  off; the acceptance bar is < 2% overhead, equal device syncs, zero
+  extra traces, and every periodic audit clean,
 * ``contig_bytes`` / ``paged_bytes`` — analytic cache-HBM bytes read per
   decode step (contiguous reads B·max_len token-slots; the live-page
   grid reads ceil(len/ps)·ps live slots per sequence),
@@ -297,6 +302,50 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         eng_off.trace_counts().values()
     )
 
+    # ---- robustness-guard overhead: NaN guard + periodic invariant audit
+    # (docs/ROBUSTNESS.md) vs both disabled, on the same warm workload
+    # with the same adjacent-pair protocol as the telemetry gate.  The
+    # NaN guard rides the batched logits fetch (same jitted launch, no
+    # extra block_until_ready) and the audit is pure host-side
+    # numpy/dict reads, so guards must cost < 2% and stay structurally
+    # free: equal device syncs, zero retraces.
+    def guarded_engine(on: bool):
+        return PagedEngine(
+            api, params, n_slots=args.slots, max_len=max_len, page_size=ps,
+            nan_guard=on, audit_every=4 if on else 0,
+        )
+
+    eng_g_on, eng_g_off = guarded_engine(True), guarded_engine(False)
+    for e2 in (eng_g_on, eng_g_off):  # populate the prefix cache once
+        timed_submit(e2, fresh_reqs(offset=500))
+    gsyncs0 = {
+        id(e2): e2.telemetry.registry.counter("device_syncs").value
+        for e2 in (eng_g_on, eng_g_off)
+    }
+    gpairs = []
+    for k in range(5):
+        first, second = (eng_g_on, eng_g_off) if k % 2 == 0 else (eng_g_off, eng_g_on)
+        ta = timed_submit(first, fresh_reqs(offset=510 + 20 * k))
+        tb = timed_submit(second, fresh_reqs(offset=520 + 20 * k))
+        gpairs.append((ta, tb) if first is eng_g_on else (tb, ta))
+    t_guard_on = min(t for t, _ in gpairs)
+    t_guard_off = min(t for _, t in gpairs)
+    guard_pair_ratio = min(t_on / t_off for t_on, t_off in gpairs)
+    gsyncs_added = {
+        id(e2): e2.telemetry.registry.counter("device_syncs").value - gsyncs0[id(e2)]
+        for e2 in (eng_g_on, eng_g_off)
+    }
+    guard_syncs_equal = gsyncs_added[id(eng_g_on)] == gsyncs_added[id(eng_g_off)]
+    guard_traces = sum(eng_g_on.trace_counts().values()) + sum(
+        eng_g_off.trace_counts().values()
+    )
+    # the periodic audits actually ran, found nothing, and nothing leaked
+    guard_audits_clean = (
+        eng_g_on._last_audit is not None
+        and eng_g_on._last_audit.ok
+        and eng_g_on.health()["counters"]["audit_failures"] == 0
+    )
+
     # ---- sequence forking: ONE prompt forked n ways (prompt pages shared
     # by refcount, divergent tails COW) vs the n-independent-requests
     # baseline that prefills and stores every page n times.
@@ -352,6 +401,13 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         "telemetry_pair_ratio": telemetry_pair_ratio,
         "telemetry_syncs_equal": telemetry_syncs_equal,
         "telemetry_traces": telemetry_traces,
+        "tok_s_guards_on": toks / t_guard_on,
+        "tok_s_guards_off": toks / t_guard_off,
+        "guard_overhead_pct": 1e2 * (guard_pair_ratio - 1.0),
+        "guard_pair_ratio": guard_pair_ratio,
+        "guard_syncs_equal": guard_syncs_equal,
+        "guard_traces": guard_traces,
+        "guard_audits_clean": guard_audits_clean,
         "ticks_contig": ticks_c,
         "ticks_paged": ticks_p,
         "ticks_chunked": ticks_ck,
@@ -442,6 +498,14 @@ def bench(args) -> bool:
             and r["telemetry_pair_ratio"] <= 1.02
             and r["telemetry_syncs_equal"]
             and r["telemetry_traces"] == 0
+            # robustness guards (NaN guard + audit_every=4) ride the hot
+            # path for free too: < 2% warm tok/s vs guards-off (same
+            # best-adjacent-pair protocol), equal device syncs, zero
+            # retraces, and the periodic audits all came back clean
+            and r["guard_pair_ratio"] <= 1.02
+            and r["guard_syncs_equal"]
+            and r["guard_traces"] == 0
+            and r["guard_audits_clean"]
         )
         print(
             f"{r['kind']:6s} {str(r['match'] and r['match_chunked']):5s} "
@@ -466,6 +530,13 @@ def bench(args) -> bool:
             f"tok/s, best-pair overhead {r['telemetry_overhead_pct']:+.2f}% "
             f"(syncs equal: {r['telemetry_syncs_equal']}, "
             f"telemetry retraces: {r['telemetry_traces']})"
+        )
+        print(
+            f"{'':6s} robustness guards (NaN guard + audit_every=4 vs off): "
+            f"{r['tok_s_guards_on']:.1f} vs {r['tok_s_guards_off']:.1f} "
+            f"tok/s, best-pair overhead {r['guard_overhead_pct']:+.2f}% "
+            f"(syncs equal: {r['guard_syncs_equal']}, retraces: "
+            f"{r['guard_traces']}, audits clean: {r['guard_audits_clean']})"
         )
         print(
             f"{'':6s} prefix-hit savings (warm pass, analytic): "

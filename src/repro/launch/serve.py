@@ -38,11 +38,20 @@ histograms, pool + prefix gauges, per-request timelines);
 (load in Perfetto or chrome://tracing); ``--quant-probes`` attaches the
 online LO-BCQ activation-quant probes (per-layer/site NMSE + codebook
 occupancy) to the W4A4 runtime.  Any of the three implies ``--paged``.
+
+Chaos smoke (docs/ROBUSTNESS.md): ``--chaos`` serves the W4A4 batch
+through a paged engine with deterministic fault injection armed at every
+seam (``--chaos-seed`` / ``--chaos-rate``), periodic invariant audits
+(``--audit-every``), per-request deadlines (``--deadline-s``) and
+optional degraded mode (``--degrade-after``), then writes a containment
+report (``--chaos-report``) that ``tools/check_chaos.py`` validates:
+zero leaked pages, zero unhandled exceptions, clean final audit.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -90,6 +99,102 @@ def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int
     finished, _ = engine.run_to_completion()
     out = {r.rid: r.out for r in finished}
     return jnp.asarray([out[i][:gen_len] for i in range(prompts.shape[0])], jnp.int32), engine
+
+
+def run_chaos(api, params, prompts, args, max_len: int) -> dict:
+    """Chaos smoke: a paged engine under deterministic fault injection.
+
+    Two submission waves over a slot-constrained engine (so requests
+    queue, preempt, and contend for pages) with every fault site armed
+    at ``--chaos-rate``; the run must drain with zero unhandled
+    exceptions, zero referenced pages, and a clean final audit.  The
+    report JSON is the contract ``tools/check_chaos.py`` validates."""
+    from repro.serving.audit import audit_engine
+    from repro.serving.engine import PagedEngine
+    from repro.serving.faults import SITES, FaultInjector
+
+    batch = int(prompts.shape[0])
+    # transient sites at the full rate; the fatal-per-request sites
+    # (logits, sampler — each roll kills a request) at a fifth, so runs
+    # keep exercising the healthy path alongside the quarantines
+    rates = {
+        s: (args.chaos_rate / 5 if s in ("logits", "sampler") else args.chaos_rate)
+        for s in SITES
+    }
+    faults = FaultInjector(seed=args.chaos_seed, rates=rates)
+    engine = PagedEngine(
+        api, params, n_slots=batch, max_len=max_len,
+        page_size=args.page_size, chunked_prefill=True,
+        prefill_chunk=args.prefill_chunk or 2 * args.page_size,
+        fault_injector=faults,
+        audit_every=args.audit_every or 4,
+        max_queue=2 * batch,
+        degrade_after=args.degrade_after,
+    )
+    # two waves: wave 2 queues behind wave 1, so admission, shedding and
+    # preemption all see contention; odd rids fork into 2 siblings
+    reqs = []
+    for wave in range(2):
+        for i in range(batch):
+            rid = wave * batch + i
+            reqs.append(Request(
+                rid=rid, prompt=np.asarray(prompts[i]), max_new=args.gen - 1,
+                n_samples=2 if rid % 2 else 1,
+                deadline_s=args.deadline_s,
+            ))
+    unhandled = None
+    ticks = 0
+    try:
+        for req in reqs:
+            engine.submit(req)
+        _, ticks = engine.run_to_completion(max_ticks=10_000)
+    except Exception as exc:  # the whole point: this must never happen
+        unhandled = f"{type(exc).__name__}: {exc}"
+    report = audit_engine(engine)
+    leaked = int((engine.pool_mgr.refcount > 0).sum())
+    outcomes = [
+        {
+            "rid": int(r.rid),
+            "sample_idx": int(r.sample_idx),
+            "error_kind": getattr(r.error, "kind", None) if r.error is not None else None,
+            "n_out": len(r.out),
+        }
+        for r in engine.finished
+    ]
+    finished_rids = {o["rid"] for o in outcomes}
+    out = {
+        "schema": 1,
+        "cache": args.cache,
+        "chaos_seed": args.chaos_seed,
+        "chaos_rate": args.chaos_rate,
+        "deadline_s": args.deadline_s,
+        "n_requests": len(reqs),
+        "all_finished": finished_rids == {r.rid for r in reqs},
+        "ticks": ticks,
+        "unhandled_exception": unhandled,
+        "leaked_pages": leaked,
+        "final_audit": report.to_dict(),
+        "health": engine.health(),
+        "faults": faults.summary(),
+        "requests": outcomes,
+    }
+    errs: dict = {}
+    for o in outcomes:
+        if o["error_kind"]:
+            errs[o["error_kind"]] = errs.get(o["error_kind"], 0) + 1
+    print(
+        f"chaos  : seed={args.chaos_seed} rate={args.chaos_rate} "
+        f"cache={args.cache} — {len(outcomes)} finished over {ticks} ticks, "
+        f"{out['faults']['total']} faults injected {out['faults']['by_site']}, "
+        f"errors {errs or '{}'}; leaked pages {leaked}, "
+        f"audit {'clean' if report.ok else 'DIRTY'}, "
+        f"unhandled {unhandled or 'none'}"
+    )
+    if args.chaos_report:
+        with open(args.chaos_report, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"chaos  : report -> {args.chaos_report}")
+    return out
 
 
 def main():
@@ -140,6 +245,34 @@ def main():
                     help="attach online LO-BCQ activation-quant probes "
                          "(per-layer/site NMSE + codebook-cluster occupancy) "
                          "to the W4A4 runtime; implies --paged")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos smoke: serve the W4A4 batch through a paged "
+                         "engine with deterministic fault injection at every "
+                         "seam (serving/faults.py) + periodic invariant "
+                         "audits, then report containment (zero leaked "
+                         "pages, zero unhandled exceptions, clean final "
+                         "audit — validated by tools/check_chaos.py). "
+                         "Runs INSTEAD of the serving comparisons.")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-injection seed — faults are a pure function "
+                         "of (seed, site, tick, key), so a failing seed "
+                         "reproduces bit-for-bit")
+    ap.add_argument("--chaos-rate", type=float, default=0.05,
+                    help="per-site fault probability per injection point")
+    ap.add_argument("--chaos-report", default=None, metavar="PATH",
+                    help="write the chaos-run report JSON (fault summary, "
+                         "engine health, final audit, per-request outcomes)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline (requests over it "
+                         "finish with error kind 'expired')")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the page-ownership invariant audit every N "
+                         "engine ticks (0 = only at the end; chaos mode "
+                         "defaults to 4)")
+    ap.add_argument("--degrade-after", type=int, default=None,
+                    help="enter degraded mode (reject forks, shrink the "
+                         "prefix LRU) after N consecutive ticks at the "
+                         "admission watermark (default: off)")
     args = ap.parse_args()
     if args.metrics_json or args.trace_out or args.quant_probes:
         args.paged = True
@@ -179,8 +312,15 @@ def main():
         0,
     )["tokens"]
     max_len = args.prompt_len + args.gen + 1
-    if (args.paged or args.best_of > 1) and max_len % args.page_size:
+    if (args.paged or args.chaos or args.best_of > 1) and max_len % args.page_size:
         max_len += args.page_size - max_len % args.page_size
+
+    if args.chaos:
+        # chaos smoke REPLACES the serving comparisons: one W4A4 paged
+        # engine with every fault seam armed (docs/ROBUSTNESS.md);
+        # tools/check_chaos.py validates the report artifact
+        run_chaos(api_q, params_q, prompts, args, max_len)
+        return None
 
     t0 = time.time()
     ref = greedy_generate(api, params, prompts, args.gen, max_len)

@@ -5,16 +5,30 @@
 - prefix.py  — prefix caching: refcounted, copy-on-write sharing of
                immutable full pages across requests
 - engine.py  — PagedEngine: continuous batching over the page pool with
-               admission control and preemption-by-eviction
+               admission control, preemption-by-eviction, and the
+               fault-containment layer (lifecycle guard, quarantine,
+               graceful degradation — docs/ROBUSTNESS.md)
 - generate.py — shared decode helpers: greedy loop, stop rule, and
                seeded temperature sampling (all serving paths)
+- faults.py  — deterministic, seeded fault injection behind the engine's
+               allocator / prefix / launch / logits / sampler seams
+- audit.py   — invariant auditor: refcount ≡ table references, the
+               free/referenced/parked partition, prefix-chain consistency
 """
+from repro.serving.audit import AuditError, AuditReport, audit_engine
 from repro.serving.engine import (
+    NonFiniteLogitsError,
     PagedEngine,
     PagePoolExhaustedError,
     PromptTooLongError,
 )
-from repro.serving.generate import Request, SamplingParams, greedy_generate
+from repro.serving.faults import FaultInjector, InjectedFault
+from repro.serving.generate import (
+    Request,
+    RequestError,
+    SamplingParams,
+    greedy_generate,
+)
 from repro.serving.pages import NULL_PAGE, PagePool
 from repro.serving.prefix import PrefixCache
 
@@ -22,10 +36,17 @@ __all__ = [
     "PagedEngine",
     "PagePoolExhaustedError",
     "PromptTooLongError",
+    "NonFiniteLogitsError",
     "Request",
+    "RequestError",
     "SamplingParams",
     "greedy_generate",
     "PagePool",
     "PrefixCache",
     "NULL_PAGE",
+    "FaultInjector",
+    "InjectedFault",
+    "AuditError",
+    "AuditReport",
+    "audit_engine",
 ]

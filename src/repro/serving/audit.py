@@ -1,0 +1,177 @@
+"""Invariant auditor for the paged serving engine.
+
+The allocator, the prefix cache, and the engine's block tables are three
+views of one ownership story; a page leak or a double-free is a
+*disagreement between the views*, which makes it mechanically checkable.
+``audit_engine`` walks all three and verifies the conservation laws the
+whole serving design rests on:
+
+* **refcount ≡ table references** — every non-null page's refcount
+  equals the number of active block-table rows holding it (each row
+  carries exactly one reference per page: prefix claims, fork refs and
+  COW replacements all preserve this), so a page nobody's table can
+  reach but whose refcount is positive is a leak, caught by name;
+* **partition** — every non-null page is exactly one of: on the free
+  list (refcount 0), table-referenced (refcount > 0), or parked
+  reclaimable in the prefix LRU (refcount 0, contents kept).  A page in
+  none of the three states is leaked; a page in two is corruption
+  (e.g. simultaneously free and parked);
+* **no dangling references** — no live slot references a freed page,
+  empty slots hold all-NULL rows, sibling-slot reservations point at
+  live parents;
+* **prefix-chain consistency** — hash↔page registration is a bijection,
+  registered refcount-0 pages are parked (evictable), no free page
+  stays registered;
+* **slot geometry** — a slot's live pages form a contiguous row prefix
+  exactly covering its position (±1 for a freshly ensured tail page).
+
+Report mode collects every violation into an :class:`AuditReport`;
+fail-fast mode (``engine.audit(strict=True)`` or ``Engine(strict=True)``)
+raises :class:`AuditError` on the first dirty report.  The walk is pure
+host-side numpy/dict reads — no device work — so ``audit_every=N`` can
+ride production ticks (benchmarks/paged_bench.py gates the overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.pages import NULL_PAGE, pages_needed
+
+
+class AuditError(RuntimeError):
+    """The engine's page-ownership invariants do not hold (fail-fast
+    mode).  The message carries every violation found."""
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Outcome of one invariant sweep."""
+
+    ok: bool
+    violations: list
+    pages_checked: int
+    slots_checked: int
+    tick: int
+
+    def raise_if_dirty(self) -> "AuditReport":
+        if not self.ok:
+            raise AuditError(
+                f"{len(self.violations)} invariant violation(s) at tick "
+                f"{self.tick}: " + "; ".join(self.violations)
+            )
+        return self
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "violations": list(self.violations),
+            "pages_checked": self.pages_checked,
+            "slots_checked": self.slots_checked,
+            "tick": self.tick,
+        }
+
+
+def audit_engine(engine) -> AuditReport:
+    """One full consistency sweep over (PagePool, PrefixCache, tables)."""
+    pool = engine.pool_mgr
+    prefix = engine.prefix
+    bad: list[str] = []
+
+    free = list(pool.free)
+    free_set = set(free)
+    parked = set(prefix.reclaimable)
+    if len(free) != len(free_set):
+        bad.append("free list contains duplicate page ids")
+    if NULL_PAGE in free_set:
+        bad.append("null page on the free list")
+    if pool.refcount[NULL_PAGE] != 0:
+        bad.append(f"null page refcount {int(pool.refcount[NULL_PAGE])} != 0")
+
+    # ---- gather table references from the engine's slot rows ------------
+    table_refs: dict[int, int] = {}
+    for i, slot in enumerate(engine.slots):
+        row = engine.tables[i]
+        live = [int(p) for p in row if int(p) != NULL_PAGE]
+        if slot.req is None:
+            if live:
+                bad.append(f"empty slot {i} still references pages {live[:4]}")
+            if slot.reserved_by is not None:
+                parent = engine.slots[slot.reserved_by]
+                if parent.req is None:
+                    bad.append(
+                        f"slot {i} reserved by empty slot {slot.reserved_by} "
+                        "(abandoned fork reservation)"
+                    )
+            continue
+        for pid in live:
+            table_refs[pid] = table_refs.get(pid, 0) + 1
+            if pid in free_set:
+                bad.append(f"slot {i} references FREED page {pid}")
+            if pool.refcount[pid] <= 0:
+                bad.append(
+                    f"slot {i} references page {pid} with refcount "
+                    f"{int(pool.refcount[pid])}"
+                )
+        # live entries must be a contiguous prefix of the row covering pos
+        n_live = len(live)
+        if any(int(p) != NULL_PAGE for p in row[n_live:]):
+            bad.append(f"slot {i} block-table row has a NULL hole before a live page")
+        need = pages_needed(slot.pos, engine.ps)
+        if n_live not in (need, need + 1):
+            bad.append(
+                f"slot {i} holds {n_live} pages for pos={slot.pos} "
+                f"(expected {need} or {need + 1})"
+            )
+
+    # ---- per-page conservation ------------------------------------------
+    for pid in range(1, pool.n_pages):
+        rc = int(pool.refcount[pid])
+        refs = table_refs.get(pid, 0)
+        if rc < 0:
+            bad.append(f"page {pid} refcount {rc} < 0")
+        if rc != refs:
+            bad.append(
+                f"page {pid} refcount {rc} != {refs} block-table references"
+            )
+        is_free = pid in free_set
+        is_parked = pid in parked
+        states = int(is_free) + int(is_parked) + int(rc > 0)
+        if states == 0:
+            bad.append(
+                f"page {pid} LEAKED: refcount 0, not free, not parked "
+                "reclaimable"
+            )
+        elif states > 1:
+            bad.append(
+                f"page {pid} in {states} states at once "
+                f"(free={is_free}, parked={is_parked}, refcount={rc})"
+            )
+
+    # ---- prefix-cache registration chain --------------------------------
+    if len(prefix.by_hash) != len(prefix.hash_of):
+        bad.append(
+            f"prefix registration not a bijection: {len(prefix.by_hash)} "
+            f"hashes vs {len(prefix.hash_of)} pages"
+        )
+    for h, pid in prefix.by_hash.items():
+        if prefix.hash_of.get(pid) != h:
+            bad.append(f"prefix hash↔page maps disagree on page {pid}")
+    for pid in prefix.hash_of:
+        if pid in free_set:
+            bad.append(f"free page {pid} still registered in the prefix cache")
+        if pool.refcount[pid] == 0 and pid not in parked:
+            bad.append(
+                f"registered page {pid} at refcount 0 is not parked "
+                "reclaimable (unevictable orphan)"
+            )
+    for pid in parked:
+        if pid not in prefix.hash_of:
+            bad.append(f"parked page {pid} has no prefix registration")
+
+    return AuditReport(
+        ok=not bad,
+        violations=bad,
+        pages_checked=pool.n_pages - 1,
+        slots_checked=len(engine.slots),
+        tick=getattr(engine, "_tick", 0),
+    )

@@ -72,6 +72,32 @@ quantization) and computes the same masked attention rows as the
 full-prompt prefill, so its greedy tokens match the non-chunked engine
 for every cache kind and prefix-hit fraction.  Verified in
 tests/test_paged_engine.py and tests/test_chunked_prefill.py.
+
+**Fault containment** (docs/ROBUSTNESS.md): the tick loop is built so
+one poisoned request cannot take the batch down or leak pages:
+
+* *lifecycle guard* — ``Request.deadline_s`` / ``max_output_stall_ticks``
+  / ``cancel()`` are enforced at every tick boundary, tearing the request
+  down (pages, fork reservations, queue entry) wherever it lives and
+  finishing it with a typed ``RequestError``;
+* *per-request quarantine* — non-finite logits, sampler exceptions, and
+  per-slot state-transition failures demote only the offending slot to
+  ``finished``-with-``error.kind == "quarantined"`` while the tick
+  completes for everyone else; admission exceptions are contained the
+  same way (with a transient-failure retry budget first).
+  ``strict=True`` re-raises instead, for debugging;
+* *invariant auditing* — ``engine.audit()`` (serving/audit.py) checks
+  refcount ≡ table references, the free/referenced/parked partition, and
+  prefix-chain consistency; ``audit_every=N`` rides production ticks;
+* *graceful degradation* — a bounded admission queue (``max_queue``)
+  sheds deadline-hopeless requests first; sustained watermark pressure
+  enters a degraded mode (forks rejected at submit, prefix LRU shrunk to
+  ``degraded_prefix_target``) with hysteresis on recovery;
+  ``engine.health()`` summarizes all of it;
+* *deterministic fault injection* — a ``serving.faults.FaultInjector``
+  wired behind the allocator / prefix-claim / launch / logits-fetch /
+  sampler seams reproduces every failure mode above at seeded
+  (tick, site) points (the CI chaos smoke, tools/check_chaos.py).
 """
 from __future__ import annotations
 
@@ -85,8 +111,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import pages as pages_lib
+from repro.serving.audit import AuditReport, audit_engine
 from repro.serving.generate import (
     Request,
+    RequestError,
     api_jit,
     next_greedy_tokens,
     pick_token,
@@ -94,7 +122,12 @@ from repro.serving.generate import (
 )
 from repro.serving.pages import NULL_PAGE, PagePool, live_pages, pages_needed
 from repro.serving.prefix import PrefixCache, chunk_hashes
-from repro.serving.telemetry import ENGINE_STAT_KEYS, StatsView, Telemetry
+from repro.serving.telemetry import (
+    ENGINE_STAT_KEYS,
+    ROBUSTNESS_STAT_KEYS,
+    StatsView,
+    Telemetry,
+)
 
 
 class PromptTooLongError(ValueError):
@@ -110,12 +143,29 @@ class PagePoolExhaustedError(RuntimeError):
     reclaimable prefix page evicted and every other sequence preempted."""
 
 
+class NonFiniteLogitsError(RuntimeError):
+    """A request's last-position logits came back NaN/Inf — a poisoned
+    forward pass (over/underflowed W4A4 activation, corrupted page).  The
+    engine's nan_guard quarantines the offending request; ``strict=True``
+    re-raises."""
+
+
 # -------------------------------------------------- shared jit plumbing
 # Per-ModelAPI jit caching lives in serving.generate.api_jit (shared with
 # ContinuousBatcher); the page ops are api-independent, so one module-level
 # jit each is enough for every engine instance.
 _SCATTER = jax.jit(pages_lib.scatter_prefill_pages)
 _COPY_PAGE = jax.jit(pages_lib.copy_page)
+# Greedy argmax + finiteness of the last-position logits in ONE fused
+# launch: the finite mask rides the same device→host fetch the argmax
+# already paid (the tick loop consumes both right after its existing
+# block_until_ready), so the NaN guard adds zero device syncs.
+_ROW_STATS = jax.jit(
+    lambda lg: (
+        jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32),
+        jnp.all(jnp.isfinite(lg[:, -1, :]), axis=-1),
+    )
+)
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -159,6 +209,15 @@ class PagedEngine:
         prefill_chunk: int = 16,
         profile_sync: bool = False,
         telemetry: Optional[Telemetry] = None,
+        fault_injector=None,
+        strict: bool = False,
+        nan_guard: bool = True,
+        audit_every: int = 0,
+        max_queue: Optional[int] = None,
+        shed_stuck: bool = True,
+        degrade_after: Optional[int] = None,
+        recover_after: int = 16,
+        degraded_prefix_target: int = 0,
     ):
         assert api.paged_decode_fn is not None, "family has no paged serving path"
         assert max_len % page_size == 0, "page_size must divide max_len"
@@ -237,6 +296,39 @@ class PagedEngine:
         # telemetry-overhead guard asserts the default level adds none
         self._c_syncs = _reg.counter("device_syncs")
         self.stats = StatsView(self)
+        # --- fault containment (docs/ROBUSTNESS.md) ---
+        # fault_injector: a serving.faults.FaultInjector consulted at the
+        # allocator / prefix-claim / launch / logits / sampler seams (None
+        # in production).  strict=True re-raises contained faults and
+        # makes audit() fail-fast (debugging / CI bisection mode).
+        # nan_guard validates last-position logits finiteness per request
+        # per tick (rides the existing fetch — zero added syncs).
+        # audit_every=N runs the serving/audit.py invariant sweep every N
+        # ticks.  max_queue bounds the admission queue with deadline-aware
+        # shedding; shed_stuck sheds an unserveable head-of-line request
+        # in run_to_completion instead of raising.  degrade_after /
+        # recover_after / degraded_prefix_target control degraded-mode
+        # hysteresis under sustained watermark pressure.  degrade_after
+        # defaults to None (disabled): automatic mode switching evicts
+        # parked prefix pages, which legitimately perturbs hit/eviction
+        # accounting — pools sized for capacity tests sit at the watermark
+        # by design, so the policy is an explicit deployment opt-in
+        # (launch/serve.py --degrade-after).
+        self.faults = fault_injector
+        self.strict = strict
+        self.nan_guard = nan_guard
+        self.audit_every = audit_every
+        self.max_queue = max_queue
+        self.shed_stuck = shed_stuck
+        self.degrade_after = degrade_after
+        self.recover_after = recover_after
+        self.degraded_prefix_target = degraded_prefix_target
+        self.degraded = False
+        self._tick = 0
+        self._pressure_ticks = 0
+        self._relief_ticks = 0
+        self._last_audit: Optional[AuditReport] = None
+        self._cr = {k: _reg.counter(k) for k in ROBUSTNESS_STAT_KEYS}
 
     def trace_counts(self, since_init: bool = True) -> dict:
         """Traces of the prefill / decode / chunk step functions.  The
@@ -254,19 +346,198 @@ class PagedEngine:
         rejected into ``finished`` with ``req.error`` set instead of
         raising out of ``step()``/``run_to_completion`` mid-flight, which
         would abandon every other in-flight request (the serving loop must
-        survive one bad prompt)."""
+        survive one bad prompt).  Degraded mode rejects forking requests
+        at this gate (an n-sibling fork is the most page-hungry admission
+        there is), and a full bounded queue (``max_queue``) sheds the
+        least-slack request — deadline-aware: the entry closest to (or
+        past) its deadline is the one least worth keeping."""
+        now = time.perf_counter()
+        if req._t_submit is None:
+            req._t_submit = now
+        req._progress_tick = self._tick
+        kind = msg = None
         if not (1 <= req.n_samples <= self.n_slots):
-            req.error = (
+            kind, msg = "invalid", (
                 f"n_samples={req.n_samples} outside [1, n_slots={self.n_slots}]"
             )
         elif not self.chunked and len(req.prompt) >= self.max_len:
-            req.error = self._too_long_msg(len(req.prompt))
-        if req.error is not None:
-            req.done = True
-            self.finished.append(req)
+            kind, msg = "too_long", self._too_long_msg(len(req.prompt))
+        elif req.cancelled:
+            kind, msg = "cancelled", "cancelled before admission"
+        elif self.degraded and req.n_samples > 1:
+            kind, msg = "shed", (
+                f"degraded mode rejects forking requests (n_samples="
+                f"{req.n_samples}); resubmit with n_samples=1 or retry later"
+            )
+        if kind is not None:
+            self._finish_error(req, kind, msg)
             return
-        self.telemetry.on_submit(req, time.perf_counter())
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            victim = self._shed_choice(req, now)
+            full = f"admission queue full (max_queue={self.max_queue})"
+            if victim is req:
+                self._finish_error(req, "shed", full)
+                return
+            self.queue.remove(victim)
+            self._finish_error(victim, "shed", f"{full}; least deadline slack")
+        self.telemetry.on_submit(req, now)
         self.queue.append(req)
+
+    def _shed_choice(self, newcomer: Request, now: float) -> Request:
+        """Queue full: pick what to shed.  The queued request with the
+        least remaining deadline slack loses (already-hopeless first);
+        unbounded requests never outrank a bounded one, and ties shed the
+        newcomer (no queue surgery)."""
+
+        def slack(r: Request) -> float:
+            if r.deadline_s is None or r._t_submit is None:
+                return float("inf")
+            return r.deadline_s - (now - r._t_submit)
+
+        victim = min(self.queue, key=slack)
+        return victim if slack(victim) < slack(newcomer) else newcomer
+
+    # ----------------------------------------------------- fault containment
+    def _finish_error(self, req: Request, kind: str, msg: str,
+                      slot: Optional[int] = None):
+        """Terminal-error path shared by every guard: free the slot when
+        the request holds one (dropping its page refs and any sibling
+        reservations), stamp the typed error, count it, finish."""
+        if slot is not None:
+            self._free_slot(slot)
+        req.error = RequestError(kind, msg)
+        req.done = True
+        if kind in self._cr:
+            self._cr[kind].inc()
+            self.telemetry.instant(kind, rid=int(req.rid))
+        self.telemetry.on_finish(req, time.perf_counter())
+        self.finished.append(req)
+
+    def _quarantine(self, i: int, exc: BaseException):
+        """Contain a per-request fault: demote ONLY slot i's request to
+        finished-with-error (releasing every page ref / reservation) and
+        let the tick proceed for everyone else."""
+        req = self.slots[i].req
+        if req is None:
+            return
+        self._finish_error(
+            req, "quarantined", f"{type(exc).__name__}: {exc}", slot=i
+        )
+
+    def _lifecycle_violation(self, req: Request, now: float) -> Optional[tuple]:
+        """(kind, msg) when the request must be torn down, else None."""
+        if req.cancelled:
+            return ("cancelled",
+                    f"cancelled by caller after {len(req.out)} tokens")
+        if (
+            req.deadline_s is not None
+            and req._t_submit is not None
+            and now - req._t_submit > req.deadline_s
+        ):
+            return ("expired",
+                    f"deadline_s={req.deadline_s} exceeded "
+                    f"({now - req._t_submit:.3f}s since submit)")
+        if (
+            req.max_output_stall_ticks is not None
+            and self._tick - req._progress_tick > req.max_output_stall_ticks
+        ):
+            return ("expired",
+                    f"no token for {self._tick - req._progress_tick} ticks "
+                    f"> max_output_stall_ticks={req.max_output_stall_ticks}")
+        return None
+
+    def _enforce_lifecycle(self):
+        """Tick-boundary sweep of the lifecycle guard over BOTH the queue
+        and the active slots: cancelled / over-deadline / output-stalled
+        requests are torn down wherever they live, releasing every page
+        reference and fork reservation."""
+        now = time.perf_counter()
+        if self.queue:
+            kept: deque[Request] = deque()
+            for req in self.queue:
+                why = self._lifecycle_violation(req, now)
+                if why is None:
+                    kept.append(req)
+                else:
+                    self._finish_error(req, *why)
+            self.queue = kept
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            why = self._lifecycle_violation(s.req, now)
+            if why is not None:
+                self._finish_error(s.req, *why, slot=i)
+
+    def _update_pressure(self):
+        """Degraded-mode hysteresis: ``degrade_after`` consecutive ticks
+        with free+reclaimable pages at or below the admission watermark
+        enter degraded mode; ``recover_after`` consecutive relieved ticks
+        leave it (asymmetric on purpose — flapping in and out each tick
+        would make shedding decisions incoherent).  While degraded, the
+        prefix LRU is shrunk toward ``degraded_prefix_target`` parked
+        pages (cached-prefix memory goes back to the live set) and
+        forking submissions are rejected (see submit)."""
+        if self.degrade_after is None:
+            return
+        pressured = self._available_pages() <= self.watermark
+        if pressured:
+            self._pressure_ticks += 1
+            self._relief_ticks = 0
+        else:
+            self._relief_ticks += 1
+            self._pressure_ticks = 0
+        if not self.degraded and self._pressure_ticks >= self.degrade_after:
+            self.degraded = True
+            self.telemetry.instant("degraded_enter", tick=self._tick)
+        elif self.degraded and self._relief_ticks >= self.recover_after:
+            self.degraded = False
+            self.telemetry.instant("degraded_exit", tick=self._tick)
+        if self.degraded:
+            self._cr["degraded_ticks"].inc()
+            while self.prefix.reclaimable_count() > self.degraded_prefix_target:
+                victim = self.prefix.evict_one()
+                if victim is None:
+                    break
+                self._c["prefix_evictions"].inc()
+                self.telemetry.instant("prefix_evict", page=int(victim))
+                self.pool_mgr.release(victim)
+
+    def audit(self, strict: Optional[bool] = None) -> AuditReport:
+        """Run the serving/audit.py invariant sweep now.  Report mode by
+        default; ``strict`` (defaulting to the engine's strict flag)
+        raises AuditError on a dirty report.  Called every
+        ``audit_every`` ticks by step()."""
+        report = audit_engine(self)
+        self._last_audit = report
+        if not report.ok:
+            self._cr["audit_failures"].inc()
+            self.telemetry.instant(
+                "audit_fail", violations=len(report.violations)
+            )
+        if self.strict if strict is None else strict:
+            report.raise_if_dirty()
+        return report
+
+    def health(self) -> dict:
+        """One JSON-able liveness/pressure summary (the ops poll surface;
+        ``snapshot()`` is the full metrics dump)."""
+        return {
+            "status": "degraded" if self.degraded else "ok",
+            "degraded": self.degraded,
+            "tick": self._tick,
+            "queue_depth": len(self.queue),
+            "active_slots": len(self._active()),
+            "watermark_headroom": self._available_pages() - self.watermark,
+            "pressure_ticks": self._pressure_ticks,
+            "relief_ticks": self._relief_ticks,
+            "counters": {k: c.value for k, c in self._cr.items()},
+            "last_audit": (
+                None if self._last_audit is None else self._last_audit.to_dict()
+            ),
+            "faults_injected": (
+                None if self.faults is None else self.faults.counts()
+            ),
+        }
 
     def _too_long_msg(self, plen: int) -> str:
         """One source of truth for submit()'s rejection marker and the
@@ -280,6 +551,8 @@ class PagedEngine:
     # ------------------------------------------------------- page plumbing
     def _alloc_page(self) -> Optional[int]:
         """Allocate a page, evicting reclaimable prefix pages LRU-first."""
+        if self.faults is not None and self.faults.alloc_fails(self._tick):
+            return None  # injected transient exhaustion (chaos testing)
         pid = self.pool_mgr.alloc()
         while pid is None:
             victim = self.prefix.evict_one()
@@ -360,6 +633,10 @@ class PagedEngine:
             if pid is None:
                 break
             hits.append(pid)
+        if hits and self.faults is not None and self.faults.drop_prefix_claim(
+            self._tick, key=int(req.rid)
+        ):
+            hits = []  # injected racing eviction: force the recompute path
         return hashes, hits
 
     def _claim_hits(self, hashes, hits, n_cacheable: int, table: np.ndarray):
@@ -400,41 +677,61 @@ class PagedEngine:
 
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
         scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
-        self._claim_hits(hashes, hits, n_full, table)
-        for i in range(len(hits), n_prompt_pages):
-            pid = self._alloc_page()
-            if pid is None:
-                raise PagePoolExhaustedError(
-                    f"allocator dry mid-admission (watermark={self.watermark} "
-                    f"should have reserved {need} pages)"
-                )
-            table[i] = pid
-            scatter_ids[i] = pid
+        try:
+            self._claim_hits(hashes, hits, n_full, table)
+            for i in range(len(hits), n_prompt_pages):
+                pid = self._alloc_page()
+                if pid is None:
+                    raise PagePoolExhaustedError(
+                        f"allocator dry mid-admission (watermark="
+                        f"{self.watermark} should have reserved {need} pages)"
+                    )
+                table[i] = pid
+                scatter_ids[i] = pid
 
-        # prefill the prompt (full max_len cache so shapes — and hence
-        # reduction order and greedy tokens — match the contiguous engine),
-        # then scatter the missed pages; shared pages are never rewritten.
-        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
-        t0 = time.perf_counter()
-        self.telemetry.on_admit(req, t0)
-        logits, cache1 = self._prefill(self.params, tokens)
-        logits = jax.block_until_ready(logits)
-        self._c_syncs.inc()
-        t1 = time.perf_counter()
-        self._c["t_prefill_s"].inc(t1 - t0)
-        self._c["prefill_launches"].inc()
-        self.telemetry.prefill_launch(t0, t1, slots=1, tokens=plen)
-        self.telemetry.on_chunk(req, t0, t1, plen)  # whole prompt, one chunk
-        self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
-        if self.prefix_caching:
-            for i in range(len(hits), n_full):
-                self.prefix.register(hashes[i], int(table[i]))
-        self._c["prefill_tokens"].inc(plen)
+            # prefill the prompt (full max_len cache so shapes — and hence
+            # reduction order and greedy tokens — match the contiguous
+            # engine), then scatter the missed pages; shared pages are
+            # never rewritten.
+            tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+            if self.faults is not None:
+                self.faults.delay_launch(self._tick, key=0)
+            t0 = time.perf_counter()
+            self.telemetry.on_admit(req, t0)
+            logits, cache1 = self._prefill(self.params, tokens)
+            logits = jax.block_until_ready(logits)
+            self._c_syncs.inc()
+            t1 = time.perf_counter()
+            self._c["t_prefill_s"].inc(t1 - t0)
+            self._c["prefill_launches"].inc()
+            self.telemetry.prefill_launch(t0, t1, slots=1, tokens=plen)
+            self.telemetry.on_chunk(req, t0, t1, plen)  # whole prompt, 1 chunk
+            self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
+            if self.prefix_caching:
+                for i in range(len(hits), n_full):
+                    self.prefix.register(hashes[i], int(table[i]))
+            self._c["prefill_tokens"].inc(plen)
+        except BaseException:
+            # roll back before propagating: the claimed hit pages and the
+            # fresh allocations live only in the local ``table`` here, so
+            # an exception (mid-admission exhaustion, injected flake, a
+            # poisoned prefill) would otherwise leak every one of them —
+            # _drop_page re-parks registered pages and frees the rest
+            for pid in table:
+                self._drop_page(int(pid))
+            raise
 
         self.tables[slot_idx] = table
         self.slots[slot_idx] = _PagedSlot(req=req, pos=plen, admit_seq=self._admit_counter)
         self._admit_counter += 1
-        self._start_decode(slot_idx, logits)
+        try:
+            self._start_decode(slot_idx, logits)
+        except Exception as exc:
+            # the request IS admitted at this point — containment is slot
+            # teardown (quarantine), not an admission-failure rollback
+            if self.strict:
+                raise
+            self._quarantine(slot_idx, exc)
         return True
 
     def _try_admit_chunked(self, req: Request, prompt, plen: int, slot_idx: int) -> bool:
@@ -502,7 +799,32 @@ class PagedEngine:
             req = self.queue[0]
             if not free or req.n_samples > len(free):
                 break  # head-of-line waits for a slot (or n sibling slots)
-            if not self._try_admit(req, free[0]):
+            try:
+                admitted = self._try_admit(req, free[0])
+            except Exception as exc:
+                if self.strict:
+                    raise
+                # containment: admission blew up mid-flight (injected alloc
+                # flake, exhaustion the watermark should have prevented, a
+                # poisoned prefill).  _try_admit already rolled its page
+                # claims back; retry a transient failure a few times from
+                # the head, then fail the REQUEST instead of the loop.
+                self.queue.popleft()
+                req._admit_retries += 1
+                if req._admit_retries <= 3:
+                    self.queue.appendleft(req)
+                    self.telemetry.instant(
+                        "admit_retry", rid=int(req.rid),
+                        attempt=req._admit_retries,
+                    )
+                else:
+                    self._finish_error(
+                        req, "quarantined",
+                        f"admission failed after {req._admit_retries - 1} "
+                        f"retries: {type(exc).__name__}: {exc}",
+                    )
+                break
+            if not admitted:
                 break  # admission control: head-of-line blocks until pages free
             self.queue.popleft()
 
@@ -518,12 +840,29 @@ class PagedEngine:
         slot = self.slots[i]
         parent = slot.req
         now = time.perf_counter()
-        greedy_tok = int(next_greedy_tokens(logits)[0])
+        nxt, finite = self._row_stats(logits)
+        if (
+            finite is not None
+            and self.faults is not None
+            and self.faults.poison_logits(self._tick, i)
+        ):
+            finite[0] = False
+        if finite is not None and not bool(finite[0]):
+            # raises to the caller (admission / chunk tick), which
+            # quarantines this slot — the request holds its pages here, so
+            # teardown is _free_slot, not an admission rollback
+            raise NonFiniteLogitsError(
+                f"non-finite logits at prefill completion (rid={parent.rid})"
+            )
+        greedy_tok = int(nxt[0])
         row = None if parent.sampling.greedy else logits[0, -1, :]
         if parent.n_samples == 1:
+            if self.faults is not None:
+                self.faults.sampler_raises(self._tick, i)
             tok = pick_token(row, greedy_tok, parent, slot.pos)
             parent.out.append(tok)
             self._next_tok[i] = tok
+            parent._progress_tick = self._tick
             self.telemetry.on_first_token(parent, now)
             self._finish_if_budget_spent(i)
             return
@@ -568,13 +907,35 @@ class PagedEngine:
         self._c["shared_pages"].inc(len(shared) * (n - 1))
         # emit first tokens only after every sibling holds its refs — a
         # budget-spent sibling retiring here must not free pages that the
-        # remaining siblings still share
+        # remaining siblings still share.  A sampler fault on one child
+        # quarantines THAT child only (its refs are already taken, so
+        # teardown is an ordinary _free_slot); its siblings keep decoding.
         for j, child in children:
-            tok = pick_token(row, greedy_tok, child, self.slots[j].pos)
+            try:
+                if self.faults is not None:
+                    self.faults.sampler_raises(self._tick, j)
+                tok = pick_token(row, greedy_tok, child, self.slots[j].pos)
+            except Exception as exc:
+                if self.strict:
+                    raise
+                self._quarantine(j, exc)
+                continue
             child.out.append(tok)
             self._next_tok[j] = tok
+            child._progress_tick = self._tick
             self.telemetry.on_first_token(child, now)
             self._finish_if_budget_spent(j)
+
+    def _row_stats(self, logits):
+        """(B,) greedy tokens + finiteness of the last-position logits,
+        host-side.  One fused launch, consumed by the same device→host
+        fetch the argmax already paid — the NaN guard is sync-free.  The
+        finite mask is None with nan_guard off (exact legacy path)."""
+        if not self.nan_guard:
+            return np.asarray(next_greedy_tokens(logits)), None
+        nxt, fin = _ROW_STATS(logits)
+        # copy: the mask is mutated by injected logits poisoning
+        return np.asarray(nxt), np.array(fin)
 
     # ------------------------------------------------------- preemption
     def _preempt_one(self, exclude: Optional[int]) -> Optional[int]:
@@ -611,7 +972,17 @@ class PagedEngine:
             # same timeline object: the resumed request reports ONE submit,
             # another admit on re-entry, TTFT from the original submit
             timeline=req.timeline,
+            # lifecycle guard survives preemption: deadlines/stall clocks
+            # anchor to the ORIGINAL submit, a cancel mid-preemption still
+            # lands, and the admission-retry budget does not reset
+            deadline_s=req.deadline_s,
+            max_output_stall_ticks=req.max_output_stall_ticks,
+            cancelled=req.cancelled,
+            _t_submit=req._t_submit,
+            _progress_tick=req._progress_tick,
+            _admit_retries=req._admit_retries,
         )
+        req._resumed_as = resumed  # cancel() on the old handle still lands
         self._free_slot(victim)
         self.queue.appendleft(resumed)
         self._c["preemptions"].inc()
@@ -730,6 +1101,8 @@ class PagedEngine:
             ids_b[r, : len(ids)] = ids
             clen[r] = c
             bt[r] = self.tables[i]
+        if self.faults is not None:
+            self.faults.delay_launch(self._tick, key=2)
         t0 = time.perf_counter()
         logits, self.pool = self._chunk_step(
             self.params, jnp.asarray(tok), self.pool,
@@ -768,7 +1141,12 @@ class PagedEngine:
                 slot.mode = "decode"
                 slot.pending = None
                 slot.hashes = None
-                self._start_decode(i, logits[r : r + 1])  # forks if n_samples > 1
+                try:
+                    self._start_decode(i, logits[r : r + 1])  # forks if n > 1
+                except Exception as exc:
+                    if self.strict:
+                        raise
+                    self._quarantine(i, exc)
         return len(batch)
 
     # ------------------------------------------------------------- ticks
@@ -783,13 +1161,20 @@ class PagedEngine:
         + ONE fused decode tick for all decoding slots (any mix of
         positions) — chunked prefill interleaves with decode instead of
         blocking admission.  Returns the number of slots served (chunks +
-        decoded)."""
+        decoded).  Tick order: lifecycle guard first (a freed slot admits
+        THIS tick), then degradation bookkeeping, then the serving work;
+        the periodic invariant audit closes the tick."""
+        self._tick += 1
+        self._enforce_lifecycle()
+        self._update_pressure()
         self._admit()
         served = self._prefill_tick_all()
 
         active = [i for i in self._decoding() if self._ensure_tail_page(i)]
         active = [i for i in active if self.slots[i].req is not None and self.slots[i].mode == "decode"]
         if not active:
+            if self.audit_every and self._tick % self.audit_every == 0:
+                self.audit()
             return served
 
         lengths = np.zeros((self.n_slots,), np.int32)
@@ -803,6 +1188,8 @@ class PagedEngine:
             for i in range(self.n_slots):
                 if i not in active:
                     bt[i] = NULL_PAGE
+        if self.faults is not None:
+            self.faults.delay_launch(self._tick, key=1)
         t0 = time.perf_counter()
         logits, self.pool = self._decode(
             self.params,
@@ -817,7 +1204,7 @@ class PagedEngine:
         self._c["t_decode_s"].inc(t1 - t0)
         self._c["decode_ticks"].inc()
         self.telemetry.decode_tick(t0, t1, n_active=len(active))
-        nxt = np.asarray(next_greedy_tokens(logits))
+        nxt, finite = self._row_stats(logits)
         last = None  # last-position logits: ONE device→host fetch when any
         # slot samples (indexing per slot on-device issued one tiny
         # transfer per sampling slot per tick)
@@ -825,41 +1212,84 @@ class PagedEngine:
             last = np.asarray(logits[:, -1, :])
         for i in active:
             slot = self.slots[i]
-            # the sampled token's absolute sequence index is pos + 1: the
-            # cache holds ``pos`` tokens and this tick writes the consumed
-            # token at ``pos`` before predicting the next one (keying by
-            # ``pos`` would reuse the first token's key and break
-            # recompute-preemption exactness)
-            tok = pick_token(
-                None if last is None else last[i], int(nxt[i]), slot.req,
-                slot.pos + 1,
-            )
-            slot.req.out.append(tok)
-            slot.pos += 1
-            self.telemetry.on_token(slot.req, t1)
-            if sequence_finished(
-                tok, len(slot.req.out), slot.req.max_new, slot.pos,
-                self._seq_capacity() if self.chunked else self.max_len, self.eos
-            ):
-                slot.req.done = True
-                self.telemetry.on_finish(slot.req, t1)
-                self.finished.append(slot.req)
-                self._free_slot(i)
-            else:
-                self._next_tok[i] = tok
+            # per-slot fault quarantine: a poisoned row / raising sampler /
+            # failed state transition demotes ONLY this request; the tick
+            # completes for every other slot
+            try:
+                if (
+                    finite is not None
+                    and self.faults is not None
+                    and self.faults.poison_logits(self._tick, i)
+                ):
+                    finite[i] = False
+                if finite is not None and not bool(finite[i]):
+                    raise NonFiniteLogitsError(
+                        f"non-finite decode logits (rid={slot.req.rid}, "
+                        f"slot={i})"
+                    )
+                if self.faults is not None:
+                    self.faults.sampler_raises(self._tick, i)
+                # the sampled token's absolute sequence index is pos + 1:
+                # the cache holds ``pos`` tokens and this tick writes the
+                # consumed token at ``pos`` before predicting the next one
+                # (keying by ``pos`` would reuse the first token's key and
+                # break recompute-preemption exactness)
+                tok = pick_token(
+                    None if last is None else last[i], int(nxt[i]), slot.req,
+                    slot.pos + 1,
+                )
+                slot.req.out.append(tok)
+                slot.pos += 1
+                slot.req._progress_tick = self._tick
+                self.telemetry.on_token(slot.req, t1)
+                if sequence_finished(
+                    tok, len(slot.req.out), slot.req.max_new, slot.pos,
+                    self._seq_capacity() if self.chunked else self.max_len,
+                    self.eos,
+                ):
+                    slot.req.done = True
+                    self.telemetry.on_finish(slot.req, t1)
+                    self.finished.append(slot.req)
+                    self._free_slot(i)
+                else:
+                    self._next_tok[i] = tok
+            except Exception as exc:
+                if self.strict:
+                    raise
+                self._quarantine(i, exc)
+        if self.audit_every and self._tick % self.audit_every == 0:
+            self.audit()
         return served + len(active)
 
     def run_to_completion(self, max_ticks: int = 10_000):
+        """Tick until the queue and the slots drain (or max_ticks).  A
+        head-of-line request the pool can NEVER serve (zero slots active,
+        nothing served, queue non-empty) is shed with a typed error and
+        the loop keeps serving everyone behind it — one impossible prompt
+        must not wedge the engine.  ``shed_stuck=False`` restores the old
+        fail-stop PagePoolExhaustedError for capacity-planning tests."""
         ticks = 0
+        stuck = 0
         while (self.queue or self._active()) and ticks < max_ticks:
             served = self.step()
             ticks += 1
             if served == 0 and self.queue and not self._active():
-                raise PagePoolExhaustedError(
+                head = self.queue[0]
+                msg = (
                     "pool too small to admit the pending request "
-                    f"(need pages for {len(self.queue[0].prompt)} prompt tokens, "
+                    f"(need pages for {len(head.prompt)} prompt tokens, "
                     f"free={self._available_pages()}, watermark={self.watermark})"
                 )
+                if not self.shed_stuck:
+                    raise PagePoolExhaustedError(msg)
+                stuck += 1
+                if stuck >= 2:  # persists past one tick — not a transient
+                    # flake (an injected alloc failure clears on retry)
+                    self.queue.popleft()
+                    self._finish_error(head, "shed", msg)
+                    stuck = 0
+            else:
+                stuck = 0
         return self.finished, ticks
 
     # ------------------------------------------------------------ metrics

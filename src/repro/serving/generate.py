@@ -48,6 +48,37 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
+class RequestError(str):
+    """Typed terminal error of a Request.
+
+    A ``str`` subclass so every existing caller that treats
+    ``req.error`` as a message (``"..." in req.error``, printing,
+    ``is not None`` checks) keeps working, while new callers branch on
+    ``req.error.kind``:
+
+    * ``"invalid"``     — rejected at submit() (bad n_samples, ...)
+    * ``"too_long"``    — non-chunked slab cannot hold the prompt
+    * ``"cancelled"``   — ``Request.cancel()`` honored by the engine
+    * ``"expired"``     — deadline_s exceeded, or the output stalled
+                          longer than max_output_stall_ticks
+    * ``"shed"``        — dropped by load shedding (full admission
+                          queue, unserveable head-of-line request, or
+                          degraded-mode fork rejection)
+    * ``"quarantined"`` — a fault (NaN logits, sampler/state exception)
+                          was contained to this request mid-tick
+    """
+
+    __slots__ = ("kind",)
+
+    def __new__(cls, kind: str, msg: str):
+        obj = super().__new__(cls, msg)
+        obj.kind = kind
+        return obj
+
+    def __repr__(self):
+        return f"RequestError({self.kind!r}, {str(self)!r})"
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request (shared by the contiguous and paged engines).
@@ -58,9 +89,20 @@ class Request:
     its own Request with this ``rid`` and a distinct ``sample_idx``.
     The submitted object itself becomes sibling 0 (n_samples demoted to
     1 at fork time), so ``done``/``out`` polling works unchanged.
-    ``error`` marks a request the engine rejected at submit() (e.g. an
-    oversized prompt on the non-chunked path) — it lands in ``finished``
-    with no output instead of poisoning the serving loop."""
+    ``error`` marks a request the engine finished abnormally (a
+    :class:`RequestError`, or a plain string from older call sites) — it
+    lands in ``finished`` instead of poisoning the serving loop.
+
+    **Lifecycle guard** (paged engine): ``deadline_s`` bounds the wall
+    clock from submission to finish — an over-deadline request is torn
+    down (every page ref and fork reservation released) with
+    ``error.kind == "expired"`` wherever it is: queued, prefilling, or
+    decoding.  ``max_output_stall_ticks`` bounds how many engine ticks
+    may pass without this request emitting a token (preemption
+    starvation guard).  ``cancel()`` requests asynchronous teardown,
+    honored at the next tick boundary with ``error.kind == "cancelled"``.
+    Both deadlines and the stall clock survive preemption (the resumed
+    request keeps the original submit anchor)."""
 
     rid: int
     prompt: np.ndarray  # (S,) int32
@@ -71,6 +113,10 @@ class Request:
     n_samples: int = 1
     sample_idx: int = 0
     error: Optional[str] = None
+    # --- lifecycle guard (None = unbounded) ---
+    deadline_s: Optional[float] = None
+    max_output_stall_ticks: Optional[int] = None
+    cancelled: bool = False
     # telemetry lifecycle timeline (serving.telemetry.RequestTimeline) —
     # attached at submit(), carried through preemption/resubmission so the
     # resumed request keeps its original submit timestamp (TTFT spans the
@@ -84,6 +130,35 @@ class Request:
     _hash_cache: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    # engine-private lifecycle anchors: wall-clock submit time (deadlines
+    # span preemptions — the resumed request carries these over) and the
+    # engine tick of the last emitted token (stall guard)
+    _t_submit: Optional[float] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _progress_tick: int = dataclasses.field(default=0, repr=False, compare=False)
+    # transient-admission-failure retry budget (fault containment)
+    _admit_retries: int = dataclasses.field(default=0, repr=False, compare=False)
+    # preemption resume chain: the engine requeues a preempted request as
+    # a NEW Request (prompt := prompt + generated); cancel() walks this
+    # link so cancelling the handle the caller submitted still lands
+    _resumed_as: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def cancel(self) -> None:
+        """Ask the engine to tear this request down.  Safe to call from
+        outside the tick loop at any lifecycle stage; the engine honors
+        it at the next tick boundary, releasing every page reference and
+        fork reservation and finishing the request with
+        ``error.kind == "cancelled"``.  Follows the preemption resume
+        chain, so the handle the caller submitted keeps working after the
+        engine requeued the request in recompute mode.  A no-op once the
+        request is done."""
+        r = self
+        while r is not None:
+            r.cancelled = True
+            r = r._resumed_as
 
 
 def api_jit(api, key, fn):

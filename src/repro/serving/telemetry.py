@@ -66,6 +66,16 @@ ENGINE_STAT_KEYS = (
     "shared_pages", "t_prefill_s", "t_decode_s",
 )
 
+# Fault-containment counters (docs/ROBUSTNESS.md).  Deliberately NOT part
+# of ENGINE_STAT_KEYS: the legacy ``engine.stats`` Mapping is a pinned
+# surface (tests snapshot/compare it), so robustness counters live only in
+# the registry / snapshot() like every post-stats metric.  The first four
+# mirror RequestError kinds one-to-one.
+ROBUSTNESS_STAT_KEYS = (
+    "quarantined", "shed", "expired", "cancelled", "audit_failures",
+    "degraded_ticks",
+)
+
 
 # ------------------------------------------------------------ instruments
 class Counter:
@@ -402,6 +412,7 @@ class Telemetry:
             engine._available_pages() - engine.watermark)
         g("queue_depth", "requests").set(len(engine.queue))
         g("active_slots", "slots").set(len(engine._active()))
+        g("degraded_mode").set(int(getattr(engine, "degraded", False)))
 
     def snapshot(self, engine=None, probe_sink=None) -> dict:
         """One JSON-able dump of everything (the --metrics-json payload)."""

@@ -21,6 +21,46 @@ except ImportError:  # pragma: no cover
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running (512-device dry-run) tests")
+    config.addinivalue_line(
+        "markers",
+        "no_leak_check: skip the autouse PagedEngine page-leak audit "
+        "(for tests that corrupt engine state on purpose)",
+    )
+
+
+@pytest.fixture(autouse=True)
+def _paged_engine_leak_check(request):
+    """Every PagedEngine built during a test must END the test with clean
+    page-ownership invariants — zero leaked pages, refcounts matching
+    block-table references, a consistent prefix chain (serving/audit.py).
+    This turns every engine test in the suite into a leak regression test
+    for every error path it happens to exercise."""
+    try:
+        from repro.serving.audit import audit_engine
+        from repro.serving.engine import PagedEngine
+    except Exception:  # pragma: no cover - serving deps unavailable
+        yield
+        return
+    engines = []
+    orig_init = PagedEngine.__init__
+
+    def tracking_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        engines.append(self)
+
+    PagedEngine.__init__ = tracking_init
+    try:
+        yield
+    finally:
+        PagedEngine.__init__ = orig_init
+    if request.node.get_closest_marker("no_leak_check"):
+        return
+    for eng in engines:
+        report = audit_engine(eng)
+        assert report.ok, (
+            f"PagedEngine left dirty page-ownership state at test teardown: "
+            f"{report.violations}"
+        )
 
 
 def pytest_collection_modifyitems(config, items):

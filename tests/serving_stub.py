@@ -1,0 +1,86 @@
+"""A deterministic, model-free ModelAPI stub for engine-level tests.
+
+The real engine tests (test_paged_engine.py etc.) verify numerics against
+actual transformer forward passes — expensive, so property tests that
+need MANY engine runs (fault injection, chaos sweeps) would time out.
+This stub serves the same ``ModelAPI`` surface the engine consumes
+(prefill_fn / paged_decode_fn / prefill_from_pages_fn / pool_init, pool
+leaves shaped like the real stacked caches so scatter/copy_page work)
+but computes logits as a pure function of the CURRENT token:
+
+    next(tok) = (tok * 7 + 3) % VOCAB       (one-hot * 10 logits)
+
+so every sequence's greedy continuation is a closed-form function of its
+prompt's last token — ``expected_greedy`` below — independent of batch
+composition, scheduling, preemption, and chunking.  That makes "greedy
+outputs of unaffected requests are bit-identical to a fault-free run"
+checkable without running a model.
+
+``nan_token`` poisons the logits row whenever the consumed token equals
+it, modeling a REAL non-finite forward pass (as opposed to the
+FaultInjector's synthetic logits poisoning at the host fetch seam).
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+
+VOCAB = 32
+
+
+def next_token(tok: int) -> int:
+    """Host-side reference for the stub's greedy transition."""
+    return (tok * 7 + 3) % VOCAB
+
+
+def expected_greedy(prompt, max_new: int) -> list:
+    """The stub engine's exact greedy output for a prompt: first token
+    from the prompt's last position, then max_new decode steps."""
+    out = []
+    t = int(prompt[-1])
+    for _ in range(max_new + 1):
+        t = next_token(t)
+        out.append(t)
+    return out
+
+
+def make_stub_api(nan_token=None):
+    def logits_of(tok):
+        """int32 tokens (...,) → (..., VOCAB) one-hot*10 logits."""
+        nxt = (tok * 7 + 3) % VOCAB
+        lg = jax.nn.one_hot(nxt, VOCAB, dtype=jnp.float32) * 10.0
+        if nan_token is not None:
+            lg = jnp.where((tok == nan_token)[..., None], jnp.nan, lg)
+        return lg
+
+    def prefill_fn(params, batch, max_len):
+        t = batch["tokens"]  # (1, S)
+        b, s = t.shape
+        lg = logits_of(t)  # (1, S, V)
+        padded = jnp.zeros((b, max_len), jnp.float32).at[:, :s].set(
+            t.astype(jnp.float32)
+        )
+        # cache leaves (L=1, B=1, S=max_len): what scatter_prefill_pages
+        # slices into (L, n_pages, page_size) pool pages
+        return lg, {"k": padded[None, :, :][:, :1, :]}
+
+    def pool_init(n_pages, ps):
+        return {"k": jnp.zeros((1, n_pages, ps), jnp.float32)}
+
+    def paged_decode_fn(params, pool, tok, bt, lengths):
+        return logits_of(tok[:, 0])[:, None, :], pool  # (B, 1, V)
+
+    def prefill_from_pages_fn(params, tok, pool, bt, n_past, ids, chunk_len=None):
+        # per-row logits at the chunk's last valid token (chunk_len - 1),
+        # matching transformer.prefill_from_pages' gathered return
+        idx = jnp.maximum(chunk_len - 1, 0).astype(jnp.int32)
+        last = jnp.take_along_axis(tok, idx[:, None], axis=1)  # (B, 1)
+        return logits_of(last), pool
+
+    return types.SimpleNamespace(
+        prefill_fn=prefill_fn,
+        decode_fn=None,
+        paged_decode_fn=paged_decode_fn,
+        pool_init=pool_init,
+        prefill_from_pages_fn=prefill_from_pages_fn,
+    )

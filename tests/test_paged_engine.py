@@ -240,14 +240,37 @@ def test_prompt_too_long_error_non_chunked_only():
 
 def test_pool_exhausted_error_names_watermark():
     """An unserveable head-of-line request surfaces as a typed allocator
-    error whose message names the watermark."""
+    error whose message names the watermark (shed_stuck=False opts back
+    into the old fail-stop raise for capacity-planning tests)."""
     api, params = _api_params("bf16")
     eng = PagedEngine(
-        api, params, n_slots=1, max_len=MAX_LEN, page_size=PS, n_pages=3, watermark=2
+        api, params, n_slots=1, max_len=MAX_LEN, page_size=PS, n_pages=3,
+        watermark=2, shed_stuck=False,
     )
     eng.submit(Request(rid=0, prompt=_prompts((9,))[0], max_new=2))
     with pytest.raises(PagePoolExhaustedError, match="watermark=2"):
         eng.run_to_completion()
+
+
+def test_stuck_head_of_line_request_is_shed_not_fatal():
+    """Default policy: an impossible head-of-line request is shed with a
+    typed error and the loop keeps serving the requests behind it."""
+    api, params = _api_params("bf16")
+    eng = PagedEngine(
+        api, params, n_slots=2, max_len=MAX_LEN, page_size=PS, n_pages=3,
+        watermark=1,
+    )
+    big = Request(rid=0, prompt=_prompts((9,))[0], max_new=2)
+    small = Request(rid=1, prompt=_prompts((4,))[0], max_new=2)
+    eng.submit(big)
+    eng.submit(small)
+    finished, _ = eng.run_to_completion()
+    assert big.error is not None and big.error.kind == "shed"
+    assert "watermark=1" in big.error
+    assert small.done and small.error is None and len(small.out) == 3
+    assert eng.telemetry.registry.counter("shed").value == 1
+    # nothing left referenced by the shed path
+    assert int((eng.pool_mgr.refcount > 0).sum()) == 0
 
 
 def test_stats_accounting_after_forced_preemption():

@@ -1,17 +1,33 @@
-"""Stateful Hypothesis property suite over the serving allocator pair
-(PagePool + PrefixCache), driving the exact lifecycle the PagedEngine
-uses: alloc → register → ref/deref → park-reclaimable → revive / evict.
+"""Stateful Hypothesis property suites for the serving layer.
 
-Invariants checked after EVERY rule:
-* refcounts are never negative (and the null page's stays 0),
-* a page is never simultaneously on the allocator free list AND parked in
-  the prefix LRU,
-* ``evict_one`` never reclaims a referenced page,
-* revive/ref/forget round-trips preserve the conservation law
-  ``available() + in_use == n_pages - 1`` (every non-null page is exactly
-  one of: free, actively referenced, or parked reclaimable),
-* the prefix registration maps stay a bijection.
+1. **PoolPrefixMachine** — the allocator pair (PagePool + PrefixCache),
+   driving the exact lifecycle the PagedEngine uses: alloc → register →
+   ref/deref → park-reclaimable → revive / evict.
+
+   Invariants checked after EVERY rule:
+   * refcounts are never negative (and the null page's stays 0),
+   * a page is never simultaneously on the allocator free list AND parked
+     in the prefix LRU,
+   * ``evict_one`` never reclaims a referenced page,
+   * revive/ref/forget round-trips preserve the conservation law
+     ``available() + in_use == n_pages - 1`` (every non-null page is
+     exactly one of: free, actively referenced, or parked reclaimable),
+   * the prefix registration maps stay a bijection.
+
+2. **FaultyEngineMachine** — a REAL PagedEngine over the deterministic
+   stub model (tests/serving_stub.py), interleaving submits / ticks with
+   injected chaos: allocator flakes, dropped prefix claims, poisoned
+   logits, raising samplers, cancels, and instantly-expiring deadlines.
+   After every rule the serving/audit.py invariant sweep must be clean
+   (no page leaks, refcount ≡ table refs, prefix bijection); at teardown
+   the engine must drain with zero referenced pages, every request
+   finished, every error carrying a typed lifecycle kind — and every
+   request that finished WITHOUT an error must have produced greedy
+   output bit-identical to the closed-form fault-free reference
+   (``serving_stub.expected_greedy``): containment may kill the faulted
+   request, never perturb a healthy one.
 """
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")  # degrade to skip, not error
@@ -19,6 +35,12 @@ hypothesis = pytest.importorskip("hypothesis")  # degrade to skip, not error
 import hypothesis.strategies as st
 from hypothesis.stateful import RuleBasedStateMachine, invariant, precondition, rule
 
+from serving_stub import VOCAB, expected_greedy, make_stub_api
+
+from repro.serving.audit import audit_engine
+from repro.serving.engine import PagedEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.generate import Request
 from repro.serving.pages import NULL_PAGE, PagePool
 from repro.serving.prefix import PrefixCache
 
@@ -171,3 +193,118 @@ class PoolPrefixMachine(RuleBasedStateMachine):
 
 
 TestPoolPrefixProperties = PoolPrefixMachine.TestCase
+
+
+# --------------------------------------------------- faulty engine machine
+# ONE stub api shared by every example: engine step functions are jitted
+# per-api (generate.api_jit), so sharing keeps Hypothesis examples from
+# recompiling the (tiny) stub jits 20 times over.
+_STUB_API = make_stub_api()
+_N_SLOTS, _MAX_LEN, _PS = 4, 64, 8
+
+VALID_ERROR_KINDS = {"cancelled", "expired", "shed", "quarantined"}
+
+
+class FaultyEngineMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.faults = FaultInjector(seed=0)  # schedule-driven (rules add)
+        self.engine = PagedEngine(
+            _STUB_API, {}, n_slots=_N_SLOTS, max_len=_MAX_LEN, page_size=_PS,
+            n_pages=24, chunked_prefill=True, prefill_chunk=2 * _PS,
+            fault_injector=self.faults,
+        )
+        self.submitted: list[Request] = []
+        # rid → fault-free greedy reference from the ORIGINAL prompt (a
+        # preempted request resumes with prompt := prompt + generated, so
+        # the finished object's own prompt is not the submitted one)
+        self.reference: dict[int, list[int]] = {}
+        self.next_rid = 0
+
+    # ------------------------------------------------------------- rules
+    @rule(data=st.data())
+    def submit(self, data):
+        plen = data.draw(st.integers(1, 20))
+        base = data.draw(st.integers(0, VOCAB - 1))
+        prompt = ((np.arange(plen) + base) % VOCAB).astype(np.int32)
+        req = Request(
+            rid=self.next_rid,
+            prompt=prompt,
+            max_new=data.draw(st.integers(1, 5)),
+            n_samples=data.draw(st.sampled_from([1, 1, 1, 2])),
+            deadline_s=data.draw(st.sampled_from([None, None, None, 0.0])),
+        )
+        self.reference[req.rid] = expected_greedy(prompt, req.max_new)
+        self.next_rid += 1
+        self.engine.submit(req)
+        self.submitted.append(req)
+
+    @rule()
+    def tick(self):
+        self.engine.step()
+
+    @rule()
+    def flake_allocator(self):
+        """EVERY allocation next tick pretends the pool is dry — mass
+        eviction/preemption pressure; transparent to outputs."""
+        self.faults.schedule.add((self.engine._tick + 1, "alloc"))
+
+    @rule()
+    def drop_prefix_claims(self):
+        self.faults.schedule.add((self.engine._tick + 1, "prefix_claim"))
+
+    @rule()
+    def poison_logits(self):
+        """Every active slot's logits read non-finite next tick — each
+        must be quarantined, none may crash the loop."""
+        self.faults.schedule.add((self.engine._tick + 1, "logits"))
+
+    @rule()
+    def raise_in_sampler(self):
+        self.faults.schedule.add((self.engine._tick + 1, "sampler"))
+
+    @precondition(lambda self: any(not r.done for r in self.submitted))
+    @rule(data=st.data())
+    def cancel_one(self, data):
+        req = data.draw(
+            st.sampled_from([r for r in self.submitted if not r.done])
+        )
+        req.cancel()
+
+    # -------------------------------------------------------- invariants
+    @invariant()
+    def ownership_invariants_hold(self):
+        report = audit_engine(self.engine)
+        assert report.ok, report.violations
+
+    def teardown(self):
+        # drain with chaos still scheduled; containment must terminate
+        self.engine.run_to_completion(max_ticks=400)
+        assert not self.engine.queue and not self.engine._active()
+        report = audit_engine(self.engine)
+        assert report.ok, report.violations
+        # zero leaked pages: nothing referenced once everything finished
+        # (parked reclaimable prefix pages are retention, not leakage —
+        # the audit's partition law above accounts for them)
+        assert int((self.engine.pool_mgr.refcount > 0).sum()) == 0
+        # every finished request: either clean + bit-identical to the
+        # fault-free closed form, or a typed lifecycle error
+        by_rid: dict[int, list[Request]] = {}
+        for fin in self.engine.finished:
+            by_rid.setdefault(fin.rid, []).append(fin)
+        for req in self.submitted:
+            assert req.rid in by_rid, f"request {req.rid} vanished"
+        for fin in self.engine.finished:
+            assert fin.done
+            if fin.error is None:
+                assert fin.out == self.reference[fin.rid], (
+                    f"rid {fin.rid}: healthy request's greedy output "
+                    f"diverged from the fault-free reference"
+                )
+            else:
+                assert getattr(fin.error, "kind", None) in VALID_ERROR_KINDS, (
+                    f"rid {fin.rid}: untyped error {fin.error!r}"
+                )
+
+
+TestFaultyEngineProperties = FaultyEngineMachine.TestCase

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Validate a chaos-run report (CI gate for fault containment).
+
+  python tools/check_chaos.py CHAOS_REPORT.json [MORE.json ...]
+
+The report comes from ``launch/serve.py --chaos --chaos-report PATH``
+(docs/ROBUSTNESS.md).  The containment contract it enforces:
+
+* **zero unhandled exceptions** — every injected fault was contained to
+  a request; the engine loop never died;
+* **zero leaked pages** — after the drain no page holds a reference
+  (parked reclaimable prefix pages are retention, not leakage — the
+  audit's partition law accounts for them);
+* **clean final audit** — refcount ≡ table references, free/referenced/
+  parked partition, prefix bijection, slot geometry;
+* **every request finished** — each submitted rid landed in
+  ``finished`` (possibly as several forked siblings), either clean or
+  with a TYPED lifecycle error kind;
+* **internal consistency** — counters agree with per-request outcomes,
+  the fault log matches its by-site tally.
+
+Only stdlib — runnable on artifacts downloaded from a CI run without
+the repo's python path set up.  Exits nonzero on the first violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SCHEMA = 1
+ERROR_KINDS = {
+    "invalid", "too_long", "cancelled", "expired", "shed", "quarantined",
+}
+FAULT_SITES = {"alloc", "prefix_claim", "launch", "logits", "sampler"}
+
+
+def fail(msg: str) -> None:
+    print(f"check_chaos: FAIL: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def check_report(path: str) -> None:
+    with open(path) as f:
+        rep = json.load(f)
+    if rep.get("schema") != SCHEMA:
+        fail(f"{path}: schema {rep.get('schema')!r} != {SCHEMA}")
+    for section in ("final_audit", "health", "faults", "requests"):
+        if section not in rep:
+            fail(f"{path}: missing section {section!r}")
+
+    # --- the containment contract ---------------------------------------
+    if rep["unhandled_exception"] is not None:
+        fail(f"{path}: unhandled exception escaped the engine: "
+             f"{rep['unhandled_exception']}")
+    if rep["leaked_pages"] != 0:
+        fail(f"{path}: {rep['leaked_pages']} referenced page(s) after drain")
+    audit = rep["final_audit"]
+    if not audit["ok"]:
+        fail(f"{path}: final audit dirty: {audit['violations']}")
+    if not rep["all_finished"]:
+        fail(f"{path}: some submitted requests never finished")
+    if not rep["requests"]:
+        fail(f"{path}: no finished requests recorded")
+
+    # --- per-request outcomes --------------------------------------------
+    for o in rep["requests"]:
+        kind = o["error_kind"]
+        if kind is not None and kind not in ERROR_KINDS:
+            fail(f"{path}: rid {o['rid']} untyped error kind {kind!r}")
+        if kind is None and o["n_out"] <= 0:
+            fail(f"{path}: rid {o['rid']} finished clean with no output")
+
+    # --- internal consistency --------------------------------------------
+    faults = rep["faults"]
+    if set(faults["by_site"]) - FAULT_SITES:
+        fail(f"{path}: unknown fault sites {set(faults['by_site']) - FAULT_SITES}")
+    if sum(faults["by_site"].values()) != faults["total"]:
+        fail(f"{path}: fault by-site tally != total {faults['total']}")
+    counters = rep["health"]["counters"]
+    for key in ("quarantined", "shed", "expired", "cancelled",
+                "audit_failures", "degraded_ticks"):
+        if counters.get(key) is None or counters[key] < 0:
+            fail(f"{path}: health counter {key!r} missing or negative")
+    if counters["audit_failures"] != 0:
+        fail(f"{path}: {counters['audit_failures']} periodic audit "
+             f"failure(s) during the run")
+    n_errored = sum(1 for o in rep["requests"] if o["error_kind"])
+    n_counted = sum(
+        counters[k] for k in ("quarantined", "shed", "expired", "cancelled")
+    )
+    if n_errored > n_counted:
+        fail(f"{path}: {n_errored} errored requests but only {n_counted} "
+             f"counted across the lifecycle counters")
+
+    errs: dict = {}
+    for o in rep["requests"]:
+        if o["error_kind"]:
+            errs[o["error_kind"]] = errs.get(o["error_kind"], 0) + 1
+    print(
+        f"check_chaos: {path} OK (cache={rep['cache']}, "
+        f"seed={rep['chaos_seed']}, rate={rep['chaos_rate']}: "
+        f"{len(rep['requests'])} finished / {rep['ticks']} ticks, "
+        f"{faults['total']} faults {faults['by_site']}, errors {errs or '{}'}, "
+        f"0 leaks, audit clean)"
+    )
+
+
+def main(argv: list[str]) -> None:
+    if not argv:
+        fail("usage: check_chaos.py CHAOS_REPORT.json [MORE.json ...]")
+    for path in argv:
+        check_report(path)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -23,6 +23,9 @@ REQUIRED_COUNTERS = (
     "prefix_hits", "prefix_misses", "preemptions", "prefix_evictions",
     "decode_ticks", "prefill_chunks", "prefill_tokens", "prefill_launches",
     "forks", "cow_copies", "shared_pages", "device_syncs",
+    # robustness layer (docs/ROBUSTNESS.md)
+    "quarantined", "shed", "expired", "cancelled",
+    "audit_failures", "degraded_ticks",
 )
 REQUIRED_GAUGES = (
     "pool_pages_used", "pool_pages_free", "pool_peak_pages",
