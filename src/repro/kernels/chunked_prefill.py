@@ -41,6 +41,7 @@ def chunked_prefill(
     cfg: BCQConfig,
     cb: jax.Array | None = None,
     interpret: bool | None = None,
+    double_buffer: bool | None = None,
 ) -> jax.Array:
     """Chunked prefill attention: q (B, C, H, D) against a single-layer pool.
 
@@ -49,8 +50,10 @@ def chunked_prefill(
     block_tables (B, MAXP) int32; n_past (B,) tokens in pages BEFORE this
     chunk (query c is at absolute position n_past[b] + c; the sequence
     must reference ≥ n_past + C written tokens through its table).
-    Returns (B, C, H, D) f32."""
+    ``double_buffer`` — two-slot hand-rolled page DMAs (default: native
+    TPU only); see ``page_gather_attention``.  Returns (B, C, H, D) f32."""
     kv_len = n_past.astype("int32") + q.shape[1]
     return page_gather_attention(
-        q, pool, block_tables, kv_len, kind, cfg, cb, interpret
+        q, pool, block_tables, kv_len, kind, cfg, cb, interpret,
+        double_buffer,
     )

@@ -264,7 +264,7 @@ def page_schedule(kv_len: jax.Array, page_size: int, maxp: int):
 
 def _page_gather_kernel(
     bt_ref, kvl_ref, sid_ref, pin_ref, first_ref, last_ref, live_ref,
-    *args, kind, cfg, ps, hkv, rep, scale, nq,
+    *args, kind, cfg, ps, hkv, rep, scale, nq, db,
 ):
     nk = _PAGE_NK[kind]
     q_ref = args[0]
@@ -274,14 +274,58 @@ def _page_gather_kernel(
     if kind == "bcq4":
         sx_ref, cbf_ref = extra[0], extra[1]
         o_ref, m_ref, l_ref, acc_ref = extra[2], extra[3], extra[4], extra[5]
+        rest = extra[6:]
         k_sx, v_sx = sx_ref[0, 0], sx_ref[0, 1]
     else:
         cbf_ref, k_sx, v_sx = None, None, None
         o_ref, m_ref, l_ref, acc_ref = extra[0], extra[1], extra[2], extra[3]
+        rest = extra[4:]
 
     t = pl.program_id(0)
     b = sid_ref[t]
     j = pin_ref[t]
+
+    if db:
+        # Double-buffered page DMAs: the K/V pool leaves stay in ANY/HBM
+        # and each grid step hand-copies its page into one of two VMEM
+        # slots (slot = step parity) — step t issues step t+1's copies
+        # BEFORE waiting on its own, so the next page streams in while
+        # this one computes.  The schedule is scalar-prefetched, so step
+        # t+1's page id is known here; dead tail steps (live == 0) start
+        # and wait nothing, preserving the BlockSpec path's dead-step DMA
+        # elision byte-for-byte.
+        import jax.experimental.pallas.tpu as pltpu
+
+        g = pl.num_programs(0)
+        bufs = rest[: 2 * nk]
+        sems = rest[2 * nk]
+        pool_refs = list(k_refs) + list(v_refs)
+
+        def page_dmas(step):
+            s = jax.lax.rem(step, 2)
+            pid = bt_ref[sid_ref[step], pin_ref[step]]
+            return [
+                pltpu.make_async_copy(
+                    leaf.at[pid], buf.at[s], sems.at[s, li]
+                )
+                for li, (leaf, buf) in enumerate(zip(pool_refs, bufs))
+            ]
+
+        @pl.when((t == 0) & (live_ref[t] == 1))
+        def _warmup():
+            for dma in page_dmas(t):
+                dma.start()
+
+        tn = jnp.minimum(t + 1, g - 1)
+
+        @pl.when((t + 1 < g) & (live_ref[tn] == 1))
+        def _prefetch_next():
+            for dma in page_dmas(tn):
+                dma.start()
+
+        slot = jax.lax.rem(t, 2)
+        k_refs = [buf.at[pl.ds(slot, 1)] for buf in bufs[:nk]]
+        v_refs = [buf.at[pl.ds(slot, 1)] for buf in bufs[nk:]]
 
     @pl.when(first_ref[t] == 1)
     def _init():
@@ -291,6 +335,9 @@ def _page_gather_kernel(
 
     @pl.when(live_ref[t] == 1)
     def _update():
+        if db:
+            for dma in page_dmas(t):
+                dma.wait()
         q = q_ref[0].astype(jnp.float32)  # (C, H, D)
         d = q.shape[-1]
         qg = q.reshape(nq, hkv, rep, d)  # GQA: batch kv groups, never repeat K/V
@@ -333,6 +380,7 @@ def page_gather_attention(
     cfg: BCQConfig,
     cb: jax.Array | None = None,
     interpret: bool | None = None,
+    double_buffer: bool | None = None,
 ) -> jax.Array:
     """The shared page-gather online-softmax attention over a page pool.
 
@@ -341,11 +389,19 @@ def page_gather_attention(
     is C == 1 with kv_len = live tokens; chunked prefill is C = chunk with
     kv_len = n_past + C).  pool leaves: (n_pages, ps, Hkv, ...) per
     ``cache_init`` layout; block_tables (B, MAXP) int32.  Returns
-    (B, C, H, D) f32.  See the module docstring for the grid schedule."""
+    (B, C, H, D) f32.  See the module docstring for the grid schedule.
+
+    ``double_buffer``: hand-rolled two-slot page DMAs (step t prefetches
+    step t+1's K/V page while computing — see the kernel) instead of the
+    BlockSpec auto-pipeline.  None → on for native TPU, off under
+    interpret (the interpreter simulates DMAs serially, so the extra
+    machinery would only slow CPU tests); an explicit bool wins, and the
+    two paths are bit-identical (asserted in tests/test_paged_kernel.py)."""
     import jax.experimental.pallas.tpu as pltpu
 
     b, nq, h, d = q.shape
     interpret = resolve_interpret(interpret)
+    db = (not interpret) if double_buffer is None else double_buffer
     maxp = block_tables.shape[1]
     if kind == "bcq4" and d % cfg.array_len:
         # per-head-vector cache quantization shrinks L_A to d_head
@@ -376,7 +432,14 @@ def page_gather_attention(
 
     inputs = [q] + k_leaves + v_leaves
     in_specs = [row_spec(q.shape)]
-    in_specs += [page_spec(leaf) for leaf in k_leaves + v_leaves]
+    if db:
+        # leaves stay whole in ANY/HBM; the kernel DMAs pages by hand
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.ANY)
+            for _ in k_leaves + v_leaves
+        ]
+    else:
+        in_specs += [page_spec(leaf) for leaf in k_leaves + v_leaves]
     if kind == "bcq4":
         sx = jnp.stack([pool["k_sx"], pool["v_sx"]]).reshape(1, 2).astype(jnp.float32)
         cbf = cb.astype(jnp.float32).reshape(-1, 1)
@@ -389,17 +452,26 @@ def page_gather_attention(
     kernel = functools.partial(
         _page_gather_kernel,
         kind=kind, cfg=cfg, ps=ps, hkv=hkv, rep=rep, scale=d**-0.5, nq=nq,
+        db=db,
     )
+    scratch_shapes = [
+        pltpu.VMEM((h, nq), jnp.float32),
+        pltpu.VMEM((h, nq), jnp.float32),
+        pltpu.VMEM((h, nq, d), jnp.float32),
+    ]
+    if db:
+        nk = _PAGE_NK[kind]
+        scratch_shapes += [
+            pltpu.VMEM((2,) + leaf.shape[1:], leaf.dtype)
+            for leaf in k_leaves + v_leaves
+        ]
+        scratch_shapes += [pltpu.SemaphoreType.DMA((2, 2 * nk))]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(b * maxp,),
         in_specs=in_specs,
         out_specs=row_spec(q.shape),
-        scratch_shapes=[
-            pltpu.VMEM((h, nq), jnp.float32),
-            pltpu.VMEM((h, nq), jnp.float32),
-            pltpu.VMEM((h, nq, d), jnp.float32),
-        ],
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
         kernel,

@@ -40,13 +40,16 @@ def paged_attention(
     cfg: BCQConfig,
     cb: jax.Array | None = None,
     interpret: bool | None = None,
+    double_buffer: bool | None = None,
 ) -> jax.Array:
     """Paged decode attention: q (B, H, D) against a single-layer page pool.
 
     pool leaves: (n_pages, page_size, Hkv, ...) per ``cache_init`` layout;
     block_tables (B, MAXP) int32; lengths (B,) live tokens per sequence.
-    Returns (B, H, D) f32."""
+    ``double_buffer`` — two-slot hand-rolled page DMAs (default: native
+    TPU only); see ``page_gather_attention``.  Returns (B, H, D) f32."""
     out = page_gather_attention(
-        q[:, None], pool, block_tables, lengths, kind, cfg, cb, interpret
+        q[:, None], pool, block_tables, lengths, kind, cfg, cb, interpret,
+        double_buffer,
     )
     return out[:, 0]

@@ -18,6 +18,10 @@ recomputed, prompt length no longer capped by the prefill slab);
 ``--prefill-chunk N`` sets the chunk size (a page multiple).
 ``--kv-bucket N`` bounds each contiguous decode step's cache read to the
 written prefix rounded up to N (bucketed dequantization).
+``--pipeline-depth D`` sets the paged tick loop's dispatch queue depth
+(default 2: tick t+1's decode launch is enqueued before syncing tick t,
+so host scheduling overlaps device compute; 1 restores the synchronous
+loop — tokens are bit-identical at any depth).
 ``--packed`` also serves through the true-storage path: weights held as
 packed 4-bit buffers and every linear dispatched to the fused
 quantize→decode→GEMM kernel (kernels/bcq_linear.py; ``--unfused`` falls
@@ -84,7 +88,8 @@ def _stat(snap: dict, name: str, default=0):
 
 
 def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int,
-                chunked: bool = False, prefill_chunk: int = 0, telemetry=None):
+                chunked: bool = False, prefill_chunk: int = 0, telemetry=None,
+                pipeline_depth: int = 2):
     """Serve the prompt batch through the PagedEngine; returns (tokens, engine)."""
     from repro.serving.engine import PagedEngine
 
@@ -93,6 +98,7 @@ def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int
         chunked_prefill=chunked,
         prefill_chunk=prefill_chunk or 2 * page_size,
         telemetry=telemetry,
+        pipeline_depth=pipeline_depth,
     )
     for i in range(prompts.shape[0]):
         engine.submit(Request(rid=i, prompt=np.asarray(prompts[i]), max_new=gen_len - 1))
@@ -130,6 +136,7 @@ def run_chaos(api, params, prompts, args, max_len: int) -> dict:
         audit_every=args.audit_every or 4,
         max_queue=2 * batch,
         degrade_after=args.degrade_after,
+        pipeline_depth=args.pipeline_depth,
     )
     # two waves: wave 2 queues behind wave 1, so admission, shedding and
     # preemption all see contention; odd rids fork into 2 siblings
@@ -218,6 +225,12 @@ def main():
                          "0 = 2 pages)")
     ap.add_argument("--kv-bucket", type=int, default=0,
                     help="bucketed decode cache reads (0 = full-cache reads)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="paged tick-loop dispatch queue depth: 2 (default) "
+                         "enqueues tick t+1's decode launch before syncing "
+                         "tick t so host scheduling overlaps device compute; "
+                         "1 = legacy synchronous loop (tokens are "
+                         "bit-identical either way)")
     ap.add_argument("--packed", action="store_true",
                     help="also serve with packed 4-bit weights (fused kernel path)")
     ap.add_argument("--unfused", action="store_true",
@@ -369,7 +382,8 @@ def main():
         t_c = time.time() - t0
         t0 = time.time()
         got_paged, engine = serve_paged(
-            api_q, params_q, prompts, args.gen, max_len, args.page_size
+            api_q, params_q, prompts, args.gen, max_len, args.page_size,
+            pipeline_depth=args.pipeline_depth,
         )
         t_p = time.time() - t0
         out_c = {r.rid: r.out for r in fin_c}
@@ -393,6 +407,7 @@ def main():
             got_ck, eng_ck = serve_paged(
                 api_q, params_q, prompts, args.gen, max_len, args.page_size,
                 chunked=True, prefill_chunk=args.prefill_chunk,
+                pipeline_depth=args.pipeline_depth,
             )
             t_ck = time.time() - t0
             agree_ck = float(jnp.mean((got_ck == ref_c).astype(jnp.float32)))
@@ -455,6 +470,7 @@ def main():
         eng_f = PagedEngine(
             api_q, params_q, n_slots=args.batch * args.best_of,
             max_len=max_len, page_size=args.page_size,
+            pipeline_depth=args.pipeline_depth,
         )
         t0 = time.time()
         for i in range(args.batch):

@@ -73,6 +73,52 @@ full-prompt prefill, so its greedy tokens match the non-chunked engine
 for every cache kind and prefix-hit fraction.  Verified in
 tests/test_paged_engine.py and tests/test_chunked_prefill.py.
 
+**Pipelined tick loop** (``pipeline_depth=2`` — the production
+default in launch/serve.py and the benches; docs/OBSERVABILITY.md
+"Pipelined tick attribution"): ``step()`` enqueues tick t+1's decode
+launch BEFORE blocking on tick t's tokens, so host scheduling,
+admission, and prefill planning overlap device compute.  The machinery
+that keeps depth 2 bit-identical to the legacy synchronous loop
+(depth 1, or ``profile_sync=True`` which forces it):
+
+* the consumed token chains launch-to-launch ON DEVICE
+  (``_make_fused_decode``: each launch computes its own argmax — and
+  NaN-guard finite mask — in the same launch, and the next launch
+  selects per-slot between that device token and a host-written one
+  via the ``use_host`` column), so no host round-trip sits between
+  decode ticks;
+* everything else the launch needs — host tokens, source flags, kv
+  lengths, block tables — rides ONE consolidated ``(B, 3+W)`` int32
+  host→device transfer per tick (``_launch_decode`` packs it; the
+  buffer is copied before ``jnp.asarray`` because the CPU backend may
+  alias host memory zero-copy while the launch is still in flight);
+* syncing a launch (``_sync_one``) books tokens per recorded row,
+  discarding rows whose slot was since retired or re-assigned
+  (speculative EOS launches), and only hands token authority back to
+  the host when no NEWER in-flight launch still chains that slot;
+* page-pool dataflow orders device work; host-side page reuse is safe
+  because a stale launch's writes land beyond every reader's
+  ``length`` (masked) or are overwritten by the new owner's prefill
+  before its first decode read;
+* preemption, teardown, and ``run_to_completion``'s exit drain the
+  in-flight queue first (public ``drain()``), so recompute snapshots
+  and final outputs always include every launched token;
+* the NaN-quarantine and sampler fault seams consume row stats one
+  tick late at depth 2 but key on the LAUNCH tick, so chaos runs
+  demote identical requests at every depth (docs/ROBUSTNESS.md,
+  "Quarantine under the pipelined tick loop").
+
+Telemetry splits attribution at depth 2: ``decode_tick_s`` holds the
+dispatch-only launch span, ``decode_sync_s`` the blocking fetch, and
+``decode_host_gap_s`` the between-launch host gap on quiet ticks —
+the pipeline's figure of merit (BENCH_paged.json gates on
+``device_bound``: mean gap < mean full device tick).  Sampled
+requests merge their token on device too (``_SET_TOK`` overlay after
+the launch) — the per-tick padded-logits host fetch is gone.
+Depth-2 ≡ depth-1 ≡ profile_sync bit-identity across cache kinds ×
+sampling × forking/preemption/chaos is pinned by
+tests/test_pipelined_engine.py.
+
 **Fault containment** (docs/ROBUSTNESS.md): the tick loop is built so
 one poisoned request cannot take the batch down or leak pages:
 
@@ -115,9 +161,11 @@ from repro.serving.audit import AuditReport, audit_engine
 from repro.serving.generate import (
     Request,
     RequestError,
+    _sample_row,
     api_jit,
     next_greedy_tokens,
     pick_token,
+    sampling_key,
     sequence_finished,
 )
 from repro.serving.pages import NULL_PAGE, PagePool, live_pages, pages_needed
@@ -166,6 +214,58 @@ _ROW_STATS = jax.jit(
         jnp.all(jnp.isfinite(lg[:, -1, :]), axis=-1),
     )
 )
+# Jitted greedy row fetch for the nan_guard=False legacy path.  The raw
+# ``next_greedy_tokens`` call used to run EAGERLY here — one un-jitted
+# argmax dispatch per tick that cost ~38% of steady-state throughput
+# (BENCH_paged.json guard_overhead_pct: -38.9 before the fix).  Routing
+# it through jit makes the guards-on/off bench gate measure guard cost,
+# not fetch implementation.
+_GREEDY_ROW = jax.jit(next_greedy_tokens)
+# Device-side merge of one sampled token into the launch's token vector
+# (the index rides as a traced scalar, so every slot shares one trace).
+_SET_TOK = jax.jit(lambda nxt, i, tok: nxt.at[i].set(tok.astype(nxt.dtype)))
+
+
+def _make_fused_decode(fn, guard: bool):
+    """The per-api decode step with everything the tick needs fused into
+    ONE launch and ONE host→device transfer:
+
+    * ``packed`` (B, 3+W) int32 carries next_tok / token-source flag /
+      kv lengths / the block table — one consolidated ``jnp.asarray``
+      per tick where the loop used to issue three;
+    * the consumed token comes from the host column OR from
+      ``chain_tok`` — the previous launch's on-device token choice — so
+      a pipelined tick chains launch-to-launch with no host round-trip;
+    * the greedy argmax (and, with the nan guard, the finite mask) of
+      the last-position row is computed in the same launch, replacing
+      the separate ``_ROW_STATS`` dispatch per tick."""
+
+    def fused(params, pool, packed, chain_tok):
+        tok = jnp.where(packed[:, 1] == 1, packed[:, 0], chain_tok)
+        logits, pool = fn(params, pool, tok[:, None], packed[:, 3:], packed[:, 2])
+        row = logits[:, -1, :]
+        nxt = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        fin = jnp.all(jnp.isfinite(row), axis=-1) if guard else None
+        return logits, nxt, fin, pool
+
+    return fused
+
+
+def _make_packed_chunk(fn, c: int, n_cp: int):
+    """The chunk-tick step with its five per-array transfers (tokens /
+    n_past / scatter ids / chunk_len / block tables) consolidated into
+    ONE packed int32 array, split on device (the slices are free — XLA
+    fuses them into the consumers)."""
+
+    def fused(params, pool, packed):
+        tok = packed[:, :c]
+        npast = packed[:, c]
+        ids = packed[:, c + 1 : c + 1 + n_cp]
+        clen = packed[:, c + 1 + n_cp]
+        bt = packed[:, c + 2 + n_cp :]
+        return fn(params, tok, pool, bt, npast, ids, clen)
+
+    return fused
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -191,6 +291,22 @@ class _PagedSlot:
     reserved_by: Optional[int] = None
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One enqueued-but-unsynced decode launch (pipeline_depth > 1 keeps
+    up to depth-1 of these between ticks).  ``rows`` snapshots
+    (slot, request, post-launch position) at launch time: by sync time a
+    row's slot may have been retired/preempted/re-admitted, in which case
+    the row was speculative and is skipped (the identity check is the
+    Request object itself — a freed slot always gets a NEW Request)."""
+
+    tick: int  # engine tick that launched it (fault seams key on this)
+    rows: list  # (slot_idx, req, pos_after_launch) triples
+    nxt: object  # (n_slots,) device int32 — merged greedy/sampled tokens
+    fin: object  # (n_slots,) device bool finite mask; None with guard off
+    n_active: int
+
+
 class PagedEngine:
     """Fixed-slot continuous batching over a shared paged KV pool."""
 
@@ -208,6 +324,7 @@ class PagedEngine:
         chunked_prefill: bool = False,
         prefill_chunk: int = 16,
         profile_sync: bool = False,
+        pipeline_depth: int = 1,
         telemetry: Optional[Telemetry] = None,
         fault_injector=None,
         strict: bool = False,
@@ -237,6 +354,22 @@ class PagedEngine:
         # inside the decode tick's sync and skews the split.  Off by
         # default: production keeps host/device overlap (benches opt in).
         self.profile_sync = profile_sync
+        # pipeline_depth: dispatch queue depth of the tick loop.  1 (the
+        # default) syncs each decode launch inside its own step() — the
+        # legacy synchronous loop, and what profile_sync needs for exact
+        # per-tick attribution (profile_sync therefore forces depth 1).
+        # Depth 2 enqueues tick t+1's launch BEFORE syncing tick t's
+        # tokens, so host scheduling/bookkeeping overlaps device compute:
+        # the consumed token chains launch-to-launch on device (see
+        # _make_fused_decode), dataflow on the page pool keeps device
+        # ordering, and the NaN-quarantine / sampler fault seams consume
+        # tick t's row stats one tick late WITHOUT changing which request
+        # gets demoted (they key on the launch tick).  Tokens are
+        # bit-identical across depths; callers reading ``req.out`` between
+        # manual step() calls on a deep engine should ``drain()`` first
+        # (run_to_completion drains on exit).
+        assert pipeline_depth >= 1, "pipeline_depth must be >= 1"
+        self.pipeline_depth = 1 if profile_sync else pipeline_depth
         if chunked_prefill:
             assert api.prefill_from_pages_fn is not None, (
                 "family has no chunked-prefill path"
@@ -265,19 +398,27 @@ class PagedEngine:
             lambda p, t, _a=api, _ml=max_len: _a.prefill_fn(p, {"tokens": t}, _ml),
         )
         self._scatter = _SCATTER
-        self._decode, c_dec = api_jit(api, "paged_decode", api.paged_decode_fn)
+        # decode rides the fused wrapper (argmax/finite in-launch, packed
+        # single-transfer inputs, device token chaining) — keyed on the
+        # guard flag so nan_guard=False skips the finite reduce entirely
+        self._decode, c_dec = api_jit(
+            api, ("paged_decode_fused", bool(nan_guard)),
+            _make_fused_decode(api.paged_decode_fn, bool(nan_guard)),
+        )
         self._copy_page = _COPY_PAGE
-        c_chunk = {"traces": 0}
         if chunked_prefill:
             # ONE launch per tick for every prefilling slot; shapes bucket
             # to powers of two (chunk length, prefill batch) and tables
             # grow by doubling, so steady-state serving retraces a bounded
-            # (bucket-count) number of times — never O(requests)
-            self._chunk_step, c_chunk = api_jit(
-                api, "chunk_step", api.prefill_from_pages_fn
-            )
-        self._trace_counters = {"prefill": c_pre, "decode": c_dec, "chunk": c_chunk}
+            # (bucket-count) number of times — never O(requests).  The
+            # callable is per-(chunk bucket, pages-per-chunk) under the
+            # hood (the packed-array split is a static layout), which is
+            # exactly the pre-existing retrace cadence — trace_counts()
+            # sums the per-bucket counters.
+            self._chunk_step = self._chunk_step_packed
+        self._trace_counters = {"prefill": c_pre, "decode": c_dec}
         self._trace_base = {k: v["traces"] for k, v in self._trace_counters.items()}
+        self._trace_base["chunk"] = self._chunk_traces_total()
         # telemetry: registry counters replace the old hand-maintained
         # stats dict; ``self.stats`` stays readable as a Mapping view with
         # the same keys/values (peak_pages reads the PagePool's own
@@ -329,16 +470,43 @@ class PagedEngine:
         self._relief_ticks = 0
         self._last_audit: Optional[AuditReport] = None
         self._cr = {k: _reg.counter(k) for k in ROBUSTNESS_STAT_KEYS}
+        # --- pipelined tick state (see pipeline_depth above) ---
+        # _inflight: enqueued-but-unsynced decode launches (≤ depth-1).
+        # _chain_tok: the LAST launch's on-device merged token choice —
+        # what a chained slot consumes next tick without a host round-trip.
+        # _chained[i]: slot i's next token lives in _chain_tok (its launch
+        # is still in flight), not in the host _next_tok row.
+        # _packed: reused host staging buffer for the consolidated
+        # per-tick transfer (token / source flag / length / block table).
+        self._inflight: deque = deque()
+        self._chain_tok = jnp.zeros((n_slots,), jnp.int32)
+        self._chained = np.zeros((n_slots,), bool)
+        self._packed = np.zeros((n_slots, 3 + self.tables.shape[1]), np.int32)
+        # host-gap attribution: launch-to-launch wall clock minus the sync
+        # waits in between = pure host scheduling time (the bench's
+        # device-bound assertion reads the resulting histogram)
+        self._last_launch_end: Optional[float] = None
+        self._gap_sync_s = 0.0
+
+    def _chunk_traces_total(self) -> int:
+        """Total traces across every (chunk bucket, pages) chunk-step
+        entry in the shared per-api jit cache."""
+        cache = getattr(self.api, "_engine_jit_cache", None) or {}
+        return sum(
+            v[1]["traces"] for k, v in cache.items()
+            if isinstance(k, tuple) and k and k[0] == "chunk_step"
+        )
 
     def trace_counts(self, since_init: bool = True) -> dict:
         """Traces of the prefill / decode / chunk step functions.  The
         callables are shared per ModelAPI; ``since_init`` subtracts the
         counts observed when THIS engine was built (so a warmed api
         reports ~0 for a steady-state run)."""
-        return {
-            k: v["traces"] - (self._trace_base[k] if since_init else 0)
-            for k, v in self._trace_counters.items()
-        }
+        counts = {k: v["traces"] for k, v in self._trace_counters.items()}
+        counts["chunk"] = self._chunk_traces_total()
+        if since_init:
+            counts = {k: v - self._trace_base.get(k, 0) for k, v in counts.items()}
+        return counts
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request):
@@ -525,6 +693,8 @@ class PagedEngine:
             "status": "degraded" if self.degraded else "ok",
             "degraded": self.degraded,
             "tick": self._tick,
+            "pipeline_depth": self.pipeline_depth,
+            "pipeline_inflight": len(self._inflight),
             "queue_depth": len(self.queue),
             "active_slots": len(self._active()),
             "watermark_headroom": self._available_pages() - self.watermark,
@@ -584,6 +754,7 @@ class PagedEngine:
             self._drop_page(int(pid))
         self.tables[i] = NULL_PAGE
         self.slots[i] = _PagedSlot()
+        self._chained[i] = False  # any in-flight row for i is now dead
         for s in self.slots:
             if s.reserved_by == i:
                 s.reserved_by = None
@@ -790,7 +961,8 @@ class PagedEngine:
             return True
         return False
 
-    def _admit(self):
+    def _admit(self) -> int:
+        admitted = 0
         while self.queue:
             free = [
                 i for i, s in enumerate(self.slots)
@@ -800,7 +972,7 @@ class PagedEngine:
             if not free or req.n_samples > len(free):
                 break  # head-of-line waits for a slot (or n sibling slots)
             try:
-                admitted = self._try_admit(req, free[0])
+                ok = self._try_admit(req, free[0])
             except Exception as exc:
                 if self.strict:
                     raise
@@ -824,9 +996,11 @@ class PagedEngine:
                         f"retries: {type(exc).__name__}: {exc}",
                     )
                 break
-            if not admitted:
+            if not ok:
                 break  # admission control: head-of-line blocks until pages free
             self.queue.popleft()
+            admitted += 1
+        return admitted
 
     def _start_decode(self, i: int, logits) -> None:
         """Prefill for slot i just produced the prompt's last-position
@@ -862,6 +1036,7 @@ class PagedEngine:
             tok = pick_token(row, greedy_tok, parent, slot.pos)
             parent.out.append(tok)
             self._next_tok[i] = tok
+            self._chained[i] = False  # host-known token: prefill just set it
             parent._progress_tick = self._tick
             self.telemetry.on_first_token(parent, now)
             self._finish_if_budget_spent(i)
@@ -922,6 +1097,7 @@ class PagedEngine:
                 continue
             child.out.append(tok)
             self._next_tok[j] = tok
+            self._chained[j] = False  # host-known token: fork just set it
             child._progress_tick = self._tick
             self.telemetry.on_first_token(child, now)
             self._finish_if_budget_spent(j)
@@ -932,7 +1108,9 @@ class PagedEngine:
         fetch the argmax already paid — the NaN guard is sync-free.  The
         finite mask is None with nan_guard off (exact legacy path)."""
         if not self.nan_guard:
-            return np.asarray(next_greedy_tokens(logits)), None
+            # jitted: the eager argmax dispatch here used to cost ~38% of
+            # steady-state throughput (see _GREEDY_ROW)
+            return np.asarray(_GREEDY_ROW(logits)), None
         nxt, fin = _ROW_STATS(logits)
         # copy: the mask is mutated by injected logits poisoning
         return np.asarray(nxt), np.array(fin)
@@ -993,8 +1171,20 @@ class PagedEngine:
 
     def _alloc_page_preempting(self, i: int) -> Optional[int]:
         """_alloc_page with preemption fallback (youngest ≠ i first).
-        Returns None iff slot i itself got preempted or nothing is left."""
+        Returns None iff slot i itself got preempted or nothing is left.
+
+        Pipelined engines drain the in-flight launch before resorting to
+        preemption: (a) its bookkeeping may retire slots and free pages,
+        making the preemption unnecessary, and (b) preemption snapshots
+        ``req.out`` into the recompute prompt, which must include every
+        launched token — evicting a victim with an unsynced tick would
+        silently drop its newest token (greedy-exactness violation)."""
         pid = self._alloc_page()
+        if pid is None and self._inflight:
+            self.drain()
+            if self.slots[i].req is None:
+                return None  # the drain retired/quarantined slot i itself
+            pid = self._alloc_page()
         while pid is None:
             if self._preempt_one(exclude=i) is None:
                 return None
@@ -1046,6 +1236,17 @@ class PagedEngine:
             return self.prefill_chunk
         return _pow2_bucket(c, self.prefill_chunk)
 
+    def _chunk_step_packed(self, params, packed, c: int, n_cp: int):
+        """One chunk-tick launch over the consolidated packed transfer.
+        The jitted splitter is cached per (chunk bucket, pages-per-chunk)
+        in the shared per-api cache — the same retrace cadence the
+        shape-bucketed multi-array step already had."""
+        fn, _ = api_jit(
+            self.api, ("chunk_step", int(c), int(n_cp)),
+            _make_packed_chunk(self.api.prefill_from_pages_fn, int(c), int(n_cp)),
+        )
+        return fn(params, self.pool, packed)
+
     def _prefill_tick_all(self) -> int:
         """Advance EVERY prefilling slot by one chunk in a SINGLE
         ``prefill_from_pages`` launch (stacked block tables / chunk starts
@@ -1089,25 +1290,23 @@ class PagedEngine:
         c_bucket = self._chunk_bucket(max(plans[i][1] for i in batch))
         n_cp_b = pages_needed(c_bucket, self.ps)
         bb = _pow2_bucket(len(batch), self.n_slots)
-        tok = np.zeros((bb, c_bucket), np.int32)
-        npast = np.zeros((bb,), np.int32)
-        ids_b = np.full((bb, n_cp_b), NULL_PAGE, np.int32)
-        clen = np.zeros((bb,), np.int32)
-        bt = np.full((bb, self.tables.shape[1]), NULL_PAGE, np.int32)
+        w = self.tables.shape[1]
+        # one packed int32 staging array → ONE host→device transfer per
+        # chunk tick (tokens | n_past | scatter ids | chunk_len | table);
+        # NULL_PAGE == 0, so zero-init doubles as the id/table padding
+        packed = np.zeros((bb, c_bucket + 2 + n_cp_b + w), np.int32)
         for r, i in enumerate(batch):
             start, c, ids = plans[i]
-            tok[r, :c] = self.slots[i].pending[start : start + c]
-            npast[r] = start
-            ids_b[r, : len(ids)] = ids
-            clen[r] = c
-            bt[r] = self.tables[i]
+            packed[r, :c] = self.slots[i].pending[start : start + c]
+            packed[r, c_bucket] = start
+            packed[r, c_bucket + 1 : c_bucket + 1 + len(ids)] = ids
+            packed[r, c_bucket + 1 + n_cp_b] = c
+            packed[r, c_bucket + 2 + n_cp_b :] = self.tables[i]
         if self.faults is not None:
             self.faults.delay_launch(self._tick, key=2)
         t0 = time.perf_counter()
         logits, self.pool = self._chunk_step(
-            self.params, jnp.asarray(tok), self.pool,
-            pages_lib.as_block_table_array(bt),
-            jnp.asarray(npast), jnp.asarray(ids_b), jnp.asarray(clen),
+            self.params, jnp.asarray(packed), c_bucket, n_cp_b
         )
         if self.profile_sync or any(
             plans[i][0] + plans[i][1] == len(self.slots[i].pending) for i in batch
@@ -1156,107 +1355,223 @@ class PagedEngine:
     def _decoding(self):
         return [i for i, s in enumerate(self.slots) if s.req is not None and s.mode == "decode"]
 
-    def step(self) -> int:
-        """Admit + ONE batched chunk launch covering every prefilling slot
-        + ONE fused decode tick for all decoding slots (any mix of
-        positions) — chunked prefill interleaves with decode instead of
-        blocking admission.  Returns the number of slots served (chunks +
-        decoded).  Tick order: lifecycle guard first (a freed slot admits
-        THIS tick), then degradation bookkeeping, then the serving work;
-        the periodic invariant audit closes the tick."""
-        self._tick += 1
-        self._enforce_lifecycle()
-        self._update_pressure()
-        self._admit()
-        served = self._prefill_tick_all()
+    def _retire_pending(self, i: int) -> bool:
+        """True when slot i's in-flight launch is GUARANTEED to retire it
+        at sync regardless of which token comes back: the budget and
+        capacity stop rules of ``sequence_finished`` are token-independent
+        (only EOS is speculative).  Such a slot must not join the next
+        launch — it would generate one token past the budget — and must
+        not allocate a tail page it will never write."""
+        if not self._chained[i]:
+            return False  # no unsynced launch — host state is current
+        slot = self.slots[i]
+        pending = sum(
+            1 for r in self._inflight for (j, rq, _) in r.rows
+            if j == i and rq is slot.req
+        )
+        cap = self._seq_capacity() if self.chunked else self.max_len
+        return (
+            len(slot.req.out) + pending >= slot.req.max_new + 1
+            or slot.pos >= cap - 1
+        )
 
-        active = [i for i in self._decoding() if self._ensure_tail_page(i)]
-        active = [i for i in active if self.slots[i].req is not None and self.slots[i].mode == "decode"]
-        if not active:
-            if self.audit_every and self._tick % self.audit_every == 0:
-                self.audit()
-            return served
-
-        lengths = np.zeros((self.n_slots,), np.int32)
+    def _launch_decode(self, active: list, quiet: bool) -> float:
+        """Enqueue ONE fused decode launch for ``active`` and push its
+        in-flight record — no host/device sync.  Token sources: the host
+        ``_next_tok`` row for freshly (re)started slots, the device
+        ``_chain_tok`` merge for slots whose previous tick is in flight
+        (or just synced) — either way the values are identical, so depth
+        1 and depth 2 produce the same tokens by construction.  Sampling
+        slots overlay a device-side ``_sample_row`` draw (same jitted
+        function, same (seed, sample_idx, position) key as the host
+        sampler — bit-identical) so the merged choice never leaves the
+        device.  Returns the launch-start timestamp."""
+        w = self.tables.shape[1]
+        if self._packed.shape[1] != 3 + w:
+            self._packed = np.zeros((self.n_slots, 3 + w), np.int32)
+        pk = self._packed
+        pk[:, 0] = self._next_tok
+        pk[:, 1] = (~self._chained).astype(np.int32)
+        pk[:, 2] = 0
+        # mask non-decoding rows (prefilling slots keep live pages in
+        # self.tables) so idle-slot scatters land in the null page
+        pk[:, 3:] = NULL_PAGE
         for i in active:
-            lengths[i] = self.slots[i].pos
-        bt = self.tables
-        if len(active) != self.n_slots:
-            # mask non-decoding rows (prefilling slots keep live pages in
-            # self.tables) so idle-slot scatters land in the null page
-            bt = self.tables.copy()
-            for i in range(self.n_slots):
-                if i not in active:
-                    bt[i] = NULL_PAGE
+            pk[i, 2] = self.slots[i].pos
+            pk[i, 3:] = self.tables[i]
         if self.faults is not None:
             self.faults.delay_launch(self._tick, key=1)
         t0 = time.perf_counter()
-        logits, self.pool = self._decode(
-            self.params,
-            self.pool,
-            jnp.asarray(self._next_tok[:, None], jnp.int32),
-            pages_lib.as_block_table_array(bt),
-            jnp.asarray(lengths, jnp.int32),
+        if quiet and self._last_launch_end is not None:
+            # steady-state host gap: launch-to-launch wall clock minus the
+            # sync waits in between = pure host scheduling/bookkeeping
+            self.telemetry.decode_gap(
+                max(0.0, t0 - self._last_launch_end - self._gap_sync_s)
+            )
+        # ship a snapshot: jax CPU may wrap numpy buffers zero-copy with
+        # immutable semantics, and pk is restaged next tick while this
+        # launch can still be in flight at depth > 1
+        logits, nxt, fin, self.pool = self._decode(
+            self.params, self.pool, jnp.asarray(pk.copy()), self._chain_tok
         )
-        logits = jax.block_until_ready(logits)
-        self._c_syncs.inc()
-        t1 = time.perf_counter()
-        self._c["t_decode_s"].inc(t1 - t0)
-        self._c["decode_ticks"].inc()
-        self.telemetry.decode_tick(t0, t1, n_active=len(active))
-        nxt, finite = self._row_stats(logits)
-        last = None  # last-position logits: ONE device→host fetch when any
-        # slot samples (indexing per slot on-device issued one tiny
-        # transfer per sampling slot per tick)
-        if any(not self.slots[i].req.sampling.greedy for i in active):
-            last = np.asarray(logits[:, -1, :])
+        for i in active:
+            req = self.slots[i].req
+            if req.sampling.greedy:
+                continue
+            # the sampled token's absolute sequence index is pos + 1: the
+            # cache holds ``pos`` tokens and this tick writes the consumed
+            # token at ``pos`` before predicting the next one (keying by
+            # ``pos`` would reuse the first token's key and break
+            # recompute-preemption exactness)
+            key = sampling_key(req.sampling, req.sample_idx, self.slots[i].pos + 1)
+            samp = _sample_row(
+                logits[i, -1, :], key,
+                jnp.float32(req.sampling.temperature), req.sampling.top_k,
+            )
+            nxt = _SET_TOK(nxt, np.int32(i), samp)
+        rows = []
         for i in active:
             slot = self.slots[i]
+            slot.pos += 1  # position advances at LAUNCH (the write is
+            # enqueued); token/EOS bookkeeping happens at sync
+            rows.append((i, slot.req, slot.pos))
+            self._chained[i] = True
+        self._chain_tok = nxt
+        self._inflight.append(
+            _InFlight(self._tick, rows, nxt, fin, len(active))
+        )
+        t1 = time.perf_counter()
+        self._c["decode_ticks"].inc()
+        self.telemetry.pipeline_gauge(len(self._inflight))
+        if self.pipeline_depth > 1:
+            # depth 1 defers span accounting to the merged sync (legacy
+            # attribution); deep mode attributes dispatch and sync apart
+            self._c["t_decode_s"].inc(t1 - t0)
+            self.telemetry.decode_tick(t0, t1, n_active=len(active))
+        self._last_launch_end = t1
+        self._gap_sync_s = 0.0
+        return t0
+
+    def _sync_one(self, merge_from: Optional[float] = None) -> None:
+        """Sync the OLDEST in-flight launch and book its tokens: append /
+        EOS-retire / quarantine per row, exactly the bookkeeping the
+        synchronous loop did — one tick later at depth 2, without changing
+        which request gets demoted (fault seams key on the launch tick).
+        ``merge_from`` (depth 1) folds the wait into the launch span so
+        profile-mode attribution matches the legacy loop exactly."""
+        rec = self._inflight.popleft()
+        t0 = time.perf_counter()
+        nxt = np.asarray(rec.nxt)  # blocks until the launch drains
+        # copy: the mask is mutated by injected logits poisoning
+        fin = None if rec.fin is None else np.array(rec.fin)
+        self._c_syncs.inc()
+        t1 = time.perf_counter()
+        self._gap_sync_s += t1 - t0
+        if merge_from is not None:
+            self._c["t_decode_s"].inc(t1 - merge_from)
+            self.telemetry.decode_tick(merge_from, t1, n_active=rec.n_active)
+        else:
+            self._c["t_decode_s"].inc(t1 - t0)
+            self.telemetry.decode_sync(t0, t1, tick=rec.tick)
+        cap = self._seq_capacity() if self.chunked else self.max_len
+        # slots with a NEWER launch still in flight: their freshest token
+        # lives in _chain_tok, so booking this (older) token must NOT
+        # flip them back to the host path — that would replay a stale
+        # token on the next launch
+        newer = {
+            j for r in self._inflight for (j, rq, _) in r.rows
+            if self.slots[j].req is rq
+        }
+        for i, req, pos in rec.rows:
+            slot = self.slots[i]
+            if slot.req is not req or req.done:
+                continue  # speculative row: the slot retired / was
+                # preempted / was torn down after this launch went out
             # per-slot fault quarantine: a poisoned row / raising sampler /
-            # failed state transition demotes ONLY this request; the tick
+            # failed state transition demotes ONLY this request; the sync
             # completes for every other slot
             try:
                 if (
-                    finite is not None
+                    fin is not None
                     and self.faults is not None
-                    and self.faults.poison_logits(self._tick, i)
+                    and self.faults.poison_logits(rec.tick, i)
                 ):
-                    finite[i] = False
-                if finite is not None and not bool(finite[i]):
+                    fin[i] = False
+                if fin is not None and not bool(fin[i]):
                     raise NonFiniteLogitsError(
-                        f"non-finite decode logits (rid={slot.req.rid}, "
+                        f"non-finite decode logits (rid={req.rid}, "
                         f"slot={i})"
                     )
                 if self.faults is not None:
-                    self.faults.sampler_raises(self._tick, i)
-                # the sampled token's absolute sequence index is pos + 1:
-                # the cache holds ``pos`` tokens and this tick writes the
-                # consumed token at ``pos`` before predicting the next one
-                # (keying by ``pos`` would reuse the first token's key and
-                # break recompute-preemption exactness)
-                tok = pick_token(
-                    None if last is None else last[i], int(nxt[i]), slot.req,
-                    slot.pos + 1,
-                )
-                slot.req.out.append(tok)
-                slot.pos += 1
-                slot.req._progress_tick = self._tick
-                self.telemetry.on_token(slot.req, t1)
+                    self.faults.sampler_raises(rec.tick, i)
+                tok = int(nxt[i])
+                req.out.append(tok)
+                req._progress_tick = self._tick
+                self.telemetry.on_token(req, t1)
                 if sequence_finished(
-                    tok, len(slot.req.out), slot.req.max_new, slot.pos,
-                    self._seq_capacity() if self.chunked else self.max_len,
-                    self.eos,
+                    tok, len(req.out), req.max_new, pos, cap, self.eos
                 ):
-                    slot.req.done = True
-                    self.telemetry.on_finish(slot.req, t1)
-                    self.finished.append(slot.req)
+                    req.done = True
+                    self.telemetry.on_finish(req, t1)
+                    self.finished.append(req)
                     self._free_slot(i)
                 else:
                     self._next_tok[i] = tok
+                    if i not in newer:
+                        self._chained[i] = False
             except Exception as exc:
                 if self.strict:
                     raise
                 self._quarantine(i, exc)
+
+    def drain(self) -> None:
+        """Sync and book every in-flight decode launch.  Public: callers
+        reading ``req.out`` between manual ``step()`` calls on a
+        ``pipeline_depth > 1`` engine should drain first
+        (``run_to_completion`` drains on exit)."""
+        while self._inflight:
+            self._sync_one()
+        self.telemetry.pipeline_gauge(0)
+
+    def step(self) -> int:
+        """Admit + ONE batched chunk launch covering every prefilling slot
+        + ONE fused decode launch for all decoding slots (any mix of
+        positions) — chunked prefill interleaves with decode instead of
+        blocking admission.  Returns the number of slots served (chunks +
+        decoded).  Tick order: lifecycle guard first (a freed slot admits
+        THIS tick), then degradation bookkeeping, then the serving work;
+        the periodic invariant audit closes the tick.
+
+        Pipelining (``pipeline_depth``): depth 1 syncs its own launch
+        before returning (legacy loop).  Depth 2 launches tick t, THEN
+        syncs tick t-1 — host scheduling for t+1 overlaps the device's
+        work on t, and only EOS is speculative (budget/capacity stops are
+        predicted host-side, see ``_retire_pending``; a post-EOS row is
+        discarded at sync).  A tick with no decode launch drains the
+        pipeline — the device is idle anyway, and slots waiting on their
+        final sync must retire for admission to reuse them."""
+        self._tick += 1
+        self._enforce_lifecycle()
+        self._update_pressure()
+        admitted = self._admit()
+        served = self._prefill_tick_all()
+
+        active = []
+        for i in self._decoding():
+            if self._retire_pending(i):
+                continue  # retires at its pending sync below
+            if self._ensure_tail_page(i):
+                active.append(i)
+        active = [i for i in active if self.slots[i].req is not None
+                  and self.slots[i].mode == "decode"]
+        if active:
+            t0 = self._launch_decode(
+                active, quiet=(served == 0 and admitted == 0)
+            )
+            while len(self._inflight) >= self.pipeline_depth:
+                self._sync_one(t0 if len(self._inflight) == 1 else None)
+        else:
+            self.drain()
         if self.audit_every and self._tick % self.audit_every == 0:
             self.audit()
         return served + len(active)
@@ -1290,6 +1605,7 @@ class PagedEngine:
                     stuck = 0
             else:
                 stuck = 0
+        self.drain()  # max_ticks can exit mid-flight at pipeline_depth > 1
         return self.finished, ticks
 
     # ------------------------------------------------------------ metrics

@@ -93,11 +93,17 @@ class Request:
     :class:`RequestError`, or a plain string from older call sites) — it
     lands in ``finished`` instead of poisoning the serving loop.
 
-    **Lifecycle guard** (paged engine): ``deadline_s`` bounds the wall
-    clock from submission to finish — an over-deadline request is torn
-    down (every page ref and fork reservation released) with
-    ``error.kind == "expired"`` wherever it is: queued, prefilling, or
-    decoding.  ``max_output_stall_ticks`` bounds how many engine ticks
+    **Lifecycle guard** (paged engine): ``deadline_s`` bounds the
+    elapsed time from ORIGINAL submission to finish, measured on the
+    monotonic ``time.perf_counter()`` clock (the engine's only clock —
+    immune to wall-clock steps from NTP/DST; not comparable to
+    ``time.time()`` values).  The anchor is stamped once at submit()
+    and carried verbatim through every preemption/resubmission cycle,
+    so a preempted-and-resumed request keeps spending the SAME budget
+    (tested in tests/test_pipelined_engine.py).  An over-deadline
+    request is torn down (every page ref and fork reservation released)
+    with ``error.kind == "expired"`` wherever it is: queued,
+    prefilling, or decoding.  ``max_output_stall_ticks`` bounds how many engine ticks
     may pass without this request emitting a token (preemption
     starvation guard).  ``cancel()`` requests asynchronous teardown,
     honored at the next tick boundary with ``error.kind == "cancelled"``.
@@ -130,9 +136,10 @@ class Request:
     _hash_cache: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False
     )
-    # engine-private lifecycle anchors: wall-clock submit time (deadlines
-    # span preemptions — the resumed request carries these over) and the
-    # engine tick of the last emitted token (stall guard)
+    # engine-private lifecycle anchors: monotonic (time.perf_counter)
+    # submit timestamp — deadlines span preemptions, the resumed request
+    # carries it over verbatim — and the engine tick of the last emitted
+    # token (stall guard)
     _t_submit: Optional[float] = dataclasses.field(
         default=None, repr=False, compare=False
     )

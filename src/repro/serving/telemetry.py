@@ -290,6 +290,15 @@ class Telemetry:
             "prefill_launch_s", LAUNCH_BUCKETS, "s")
         self.h_decode = self.registry.histogram(
             "decode_tick_s", LAUNCH_BUCKETS, "s")
+        # pipelined-engine split: launch span (decode_tick) vs the wait at
+        # sync one tick later, plus the pure host gap between launches —
+        # the device-bound criterion is host gap < decode span
+        self.h_decode_sync = self.registry.histogram(
+            "decode_sync_s", LAUNCH_BUCKETS, "s")
+        self.h_host_gap = self.registry.histogram(
+            "decode_host_gap_s", LAUNCH_BUCKETS, "s")
+        self.g_inflight = self.registry.gauge(
+            "pipeline_inflight", "launches")
 
     # ------------------------------------------------- request lifecycle
     def _timeline(self, req) -> Optional[RequestTimeline]:
@@ -393,6 +402,26 @@ class Telemetry:
             return
         self.h_decode.observe(t1 - t0)
         self.journal.span("decode_tick", t0, t1, args=args or None)
+
+    def decode_sync(self, t0: float, t1: float, **args) -> None:
+        """The sync-side wait of a pipelined decode launch (depth > 1):
+        how long the host blocked for the oldest in-flight launch.  With
+        ``profile_sync`` / depth 1 the wait is folded into ``decode_tick``
+        instead (legacy attribution), so this histogram stays empty."""
+        if not self.detailed:
+            return
+        self.h_decode_sync.observe(t1 - t0)
+        self.journal.span("decode_sync", t0, t1, args=args or None)
+
+    def decode_gap(self, gap: float) -> None:
+        """Pure host time between consecutive steady-state decode
+        launches (sync waits already subtracted by the engine)."""
+        if not self.detailed:
+            return
+        self.h_host_gap.observe(gap)
+
+    def pipeline_gauge(self, depth: int) -> None:
+        self.g_inflight.set(int(depth))
 
     def instant(self, name: str, ts: Optional[float] = None, **args) -> None:
         self.journal.instant(name, ts, tid=TID_HOST, args=args or None)

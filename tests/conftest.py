@@ -56,6 +56,12 @@ def _paged_engine_leak_check(request):
     if request.node.get_closest_marker("no_leak_check"):
         return
     for eng in engines:
+        # a pipelined engine must end every test drained: an in-flight
+        # decode launch at teardown means tokens were silently dropped
+        assert len(eng._inflight) == 0, (
+            f"PagedEngine left {len(eng._inflight)} decode launch(es) "
+            f"in flight at test teardown (missing drain()?)"
+        )
         report = audit_engine(eng)
         assert report.ok, (
             f"PagedEngine left dirty page-ownership state at test teardown: "

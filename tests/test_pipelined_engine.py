@@ -1,0 +1,248 @@
+"""Pipelined tick loop (PagedEngine pipeline_depth > 1): token-for-token
+equivalence with the synchronous/profile_sync loop across cache kinds,
+sampling, forking, preemption, and chaos; deferred-quarantine exactness;
+the public drain() contract; and the monotonic deadline anchor surviving
+a preemption-resume chain (the clock-choice bugfix)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from serving_stub import VOCAB, expected_greedy, make_stub_api
+
+from repro.configs.base import get_smoke
+from repro.core.bcq import BCQConfig
+from repro.core.calibrate import default_universal_codebooks
+from repro.models import zoo
+from repro.models.layers import Runtime
+from repro.serving.engine import PagedEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.generate import Request, SamplingParams
+
+STUB = make_stub_api()
+SAMPLED = SamplingParams(temperature=0.8, top_k=8, seed=11)
+
+
+def _mk(api=STUB, depth=1, profile=False, faults=None, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("n_pages", 48)
+    kw.setdefault("chunked_prefill", True)
+    kw.setdefault("prefill_chunk", 16)
+    return PagedEngine(
+        api, {}, pipeline_depth=depth, profile_sync=profile,
+        fault_injector=faults, **kw
+    )
+
+
+def _reqs(n=5, max_new=6, sampling=None, **kw):
+    rng = np.random.default_rng(3)
+    out = []
+    for i in range(n):
+        prompt = rng.integers(0, VOCAB, size=int(rng.integers(1, 14)))
+        out.append(Request(
+            rid=i, prompt=prompt.astype(np.int32), max_new=max_new,
+            sampling=sampling or SamplingParams(), **kw,
+        ))
+    return out
+
+
+def _run(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert len(eng._inflight) == 0
+    return {(r.rid, r.sample_idx): list(r.out) for r in eng.finished}
+
+
+# ----------------------------------------------------- depth invariance
+@pytest.mark.parametrize("sampling", (None, SAMPLED), ids=("greedy", "sampled"))
+@pytest.mark.parametrize("chunked", (True, False), ids=("chunked", "plain"))
+def test_depth_invariance_stub(sampling, chunked):
+    """depth 1 ≡ depth 2 ≡ profile_sync, greedy and seeded-sampled, on
+    the closed-form stub — and greedy matches the closed form."""
+    outs = [
+        _run(_mk(depth=d, profile=p, chunked_prefill=chunked),
+             _reqs(sampling=sampling))
+        for d, p in ((1, False), (2, False), (1, True))
+    ]
+    assert outs[0] == outs[1] == outs[2]
+    if sampling is None:
+        for r in _reqs():
+            assert outs[0][(r.rid, 0)] == expected_greedy(r.prompt, r.max_new)
+
+
+def test_depth_invariance_forked_sampled():
+    """best-of-n forking (COW tail pages) stays depth-invariant."""
+    def go(depth):
+        eng = _mk(depth=depth, n_slots=4)
+        reqs = _reqs(n=2, sampling=SAMPLED, n_samples=2)
+        return _run(eng, reqs)
+
+    a, b = go(1), go(2)
+    assert a == b and len(a) == 4
+
+
+def test_depth_invariance_under_preemption():
+    """A pool small enough to force preemption-by-eviction: the pipelined
+    loop drains before evicting, so recompute resume stays exact."""
+    def go(depth):
+        eng = _mk(depth=depth, n_slots=3, n_pages=8, max_len=48)
+        return _run(eng, _reqs(n=4, max_new=8)), eng.stats["preemptions"]
+
+    (a, pa), (b, pb) = go(1), go(2)
+    assert a == b
+    assert pa > 0 and pb > 0  # the scenario actually preempted
+
+
+def test_depth_invariance_under_chaos():
+    """Injected faults (alloc flakes, logits poison, sampler raises) key
+    on the LAUNCH tick, so the same requests are demoted at depth 1 and
+    depth 2 and everyone else is bit-identical."""
+    def go(depth):
+        faults = FaultInjector(
+            seed=5, rates={"alloc": 0.05, "logits": 0.02, "sampler": 0.02}
+        )
+        eng = _mk(depth=depth, faults=faults, nan_guard=True, strict=False)
+        out = _run(eng, _reqs(n=6, max_new=6))
+        errs = {
+            (r.rid, r.sample_idx): r.error.kind
+            for r in eng.finished if r.error is not None
+        }
+        return out, errs
+
+    (a, ea), (b, eb) = go(1), go(2)
+    assert ea == eb
+    assert a == b
+
+
+def test_real_nan_quarantine_is_deferred_not_dropped():
+    """A REAL non-finite forward (stub nan_token) hits at sync time — one
+    tick after launch at depth 2 — and still demotes exactly the poisoned
+    request; the others match a fault-free run."""
+    api = make_stub_api(nan_token=31)
+
+    def go(depth):
+        eng = _mk(api=api, depth=depth, nan_guard=True, strict=False)
+        reqs = [
+            Request(rid=0, prompt=np.array([9], np.int32), max_new=4),
+            # 4 -> 31 -> NaN row on the next consumed token
+            Request(rid=1, prompt=np.array([4], np.int32), max_new=4),
+            Request(rid=2, prompt=np.array([2], np.int32), max_new=4),
+        ]
+        out = _run(eng, reqs)
+        bad = {r.rid for r in eng.finished if r.error is not None}
+        return out, bad
+
+    (a, bad1), (b, bad2) = go(1), go(2)
+    assert bad1 == bad2 == {1}
+    assert a == b
+    assert a[(0, 0)] == expected_greedy([9], 4)
+
+
+@pytest.mark.parametrize("kind", ("bf16", "int8", "bcq4"))
+def test_real_model_pipelined_equals_profile_sync(kind):
+    """Real transformer forward (every cache kind): depth-2 pipelined
+    output is bit-identical to profile_sync mode."""
+    cfg = get_smoke("gpt3_126m")
+    rt = Runtime(
+        quant_mode="none", compute_dtype=jnp.float32,
+        param_dtype=jnp.float32, cache_kind=kind,
+    )
+    api = zoo.build(cfg, rt)
+    params = api.init(jax.random.PRNGKey(0))
+    params["codebooks"] = default_universal_codebooks(BCQConfig()).as_jnp()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 7)]
+
+    def go(depth, profile):
+        eng = PagedEngine(
+            api, params, n_slots=2, max_len=32, page_size=8,
+            pipeline_depth=depth, profile_sync=profile,
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=4))
+        eng.run_to_completion()
+        return {r.rid: list(r.out) for r in eng.finished}
+
+    assert go(2, False) == go(1, True)
+
+
+# ------------------------------------------------------ pipeline surface
+def test_manual_step_then_drain():
+    """Manual step() calls on a depth-2 engine leave ≤ depth-1 launches
+    in flight; drain() books them and empties the queue."""
+    eng = _mk(depth=2)
+    for r in _reqs(n=2, max_new=6):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    assert len(eng._inflight) <= 1
+    assert eng.health()["pipeline_depth"] == 2
+    eng.drain()
+    assert len(eng._inflight) == 0
+    assert eng.health()["pipeline_inflight"] == 0
+    eng.run_to_completion()
+
+
+def test_profile_sync_forces_depth_one():
+    eng = _mk(depth=2, profile=True)
+    assert eng.pipeline_depth == 1
+    out = _run(eng, _reqs(n=2))
+    # per-tick attribution intact: every decode tick observed one span
+    h = eng.telemetry.registry.histograms["decode_tick_s"]
+    assert h.count == eng.stats["decode_ticks"]
+    # the pipelined sync histogram stays empty in merged mode
+    assert eng.telemetry.registry.histograms["decode_sync_s"].count == 0
+
+
+def test_pipelined_split_spans_and_gauge():
+    """Depth 2 splits attribution: launch spans land in decode_tick_s,
+    sync waits in decode_sync_s, and the queue-depth gauge tracks the
+    in-flight count."""
+    eng = _mk(depth=2)
+    _run(eng, _reqs(n=3))
+    reg = eng.telemetry.registry
+    ticks = eng.stats["decode_ticks"]
+    assert reg.histograms["decode_tick_s"].count == ticks
+    assert reg.histograms["decode_sync_s"].count == ticks
+    assert reg.gauges["pipeline_inflight"].value == 0
+
+
+# ----------------------------------------------------- deadline anchor
+def test_deadline_anchor_survives_preemption_chain():
+    """The monotonic (perf_counter) deadline anchor is stamped once at
+    the ORIGINAL submit and carried verbatim through preemption-resume —
+    a resumed request never gets a fresh budget."""
+    eng = _mk(depth=2, n_slots=3, n_pages=8, max_len=48)
+    reqs = _reqs(n=4, max_new=8, deadline_s=3600.0)
+    out = _run(eng, reqs)
+    assert eng.stats["preemptions"] > 0
+    anchors = {}
+    for r in eng.finished:
+        assert r.error is None  # nobody expired under a 1-hour budget
+        anchors.setdefault((r.rid, r.sample_idx), set()).add(r._t_submit)
+    for r in reqs:
+        # follow the resume chain from the original handle: every resumed
+        # incarnation shares the original anchor
+        seen = r
+        while seen is not None:
+            assert seen._t_submit == r._t_submit
+            seen = getattr(seen, "_resumed_as", None)
+
+
+def test_deadline_expires_on_elapsed_monotonic_time():
+    """deadline_s compares perf_counter spans, not wall-clock dates: an
+    already-elapsed budget expires the request at the next tick."""
+    eng = _mk(depth=2)
+    r = Request(rid=0, prompt=np.array([3], np.int32), max_new=50,
+                deadline_s=0.02)
+    eng.submit(r)
+    t0 = time.perf_counter()
+    while not r.done and time.perf_counter() - t0 < 10.0:
+        eng.step()
+    eng.drain()
+    assert r.done and r.error is not None and r.error.kind == "expired"
