@@ -12,6 +12,14 @@ the bf16 baseline.
 ``--paged`` routes the W4A4 pass through the paged serving engine
 (serving/engine.py): page-pool KV cache, prefix caching, admission
 control — and verifies its greedy outputs equal the contiguous path.
+State-checkpoint families (ssm / hybrid / enc-dec, e.g. --arch
+mamba2_130m, recurrentgemma_9b, whisper_base) serve through
+serving/state_engine.py instead: typed ``state`` pages checkpoint the
+O(1) recurrent state at page boundaries (preemption replays ≤ page_size
+tokens), and enc-dec publishes its encoder output once per distinct
+audio into a read-only ``shared_ro`` page (docs/SERVING.md).  A family
+with no paged path (e.g. pixtral_12b) raises a typed
+``UnsupportedModelError`` naming the family and the supported list.
 ``--chunked-prefill`` additionally serves through chunk-at-a-time
 admission (prefill spread across ticks, prefix-hit pages never
 recomputed, prompt length no longer capped by the prefill slab);
@@ -87,39 +95,105 @@ def _stat(snap: dict, name: str, default=0):
     return default
 
 
+def _check_servable(api, cfg) -> object:
+    """The paged gate: return the family's PageSpec or raise the typed,
+    actionable error (names the family AND the supported list) instead of
+    failing deep inside an engine constructor."""
+    spec = getattr(api, "page_spec", None)
+    if spec is None:
+        raise zoo.UnsupportedModelError(
+            cfg.name, cfg.family,
+            reason="Drop --paged/--chaos/--best-of or pick an arch from a "
+            "servable family.",
+        )
+    return spec
+
+
+def _stub_frames(cfg) -> np.ndarray:
+    """Deterministic stub audio-frame embeddings for enc-dec serving (the
+    conv frontend is stubbed repo-wide).  ONE frame tensor for the whole
+    batch, so the shared-encoder page dedupes every request's encode."""
+    return np.asarray(
+        jax.random.normal(
+            jax.random.PRNGKey(11), (cfg.encoder_len, cfg.d_model)
+        ) * 0.02,
+        np.float32,
+    )
+
+
+def generate_contiguous(api, cfg, params, prompts, frames, gen_len: int,
+                        max_len: int, kv_bucket: int = 0):
+    """Contiguous greedy decode for ANY servable family: plain
+    ``greedy_generate`` unless the family conditions on frames (enc-dec),
+    which the generic prompt-only helper cannot carry."""
+    if frames is None:
+        return greedy_generate(api, params, prompts, gen_len, max_len,
+                               kv_bucket=kv_bucket)
+    from repro.serving.generate import next_greedy_tokens
+
+    b, s = prompts.shape
+    fr = jnp.broadcast_to(jnp.asarray(frames)[None], (b,) + frames.shape)
+    logits, caches = jax.jit(
+        lambda p, t, f: api.prefill_fn(p, {"tokens": t, "frames": f}, max_len)
+    )(params, prompts, fr)
+    out = [next_greedy_tokens(logits)]
+    step = jax.jit(api.decode_fn)
+    for t in range(gen_len - 1):
+        logits, caches = step(params, caches, out[-1][:, None], jnp.int32(s + t))
+        out.append(next_greedy_tokens(logits))
+    return jnp.stack(out, 1)
+
+
 def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int,
                 chunked: bool = False, prefill_chunk: int = 0, telemetry=None,
-                pipeline_depth: int = 2):
-    """Serve the prompt batch through the PagedEngine; returns (tokens, engine)."""
-    from repro.serving.engine import PagedEngine
+                pipeline_depth: int = 2, frames=None):
+    """Serve the prompt batch through the page-spec'd engine — PagedEngine
+    for kv_paged families, StatePagedEngine for state_checkpoint families
+    (SSM / hybrid / enc-dec).  Returns (tokens, engine)."""
+    spec = getattr(api, "page_spec", None)
+    if spec is not None and spec.layout == "state_checkpoint":
+        from repro.serving.state_engine import StatePagedEngine
 
-    engine = PagedEngine(
-        api, params, n_slots=prompts.shape[0], max_len=max_len, page_size=page_size,
-        chunked_prefill=chunked,
-        prefill_chunk=prefill_chunk or 2 * page_size,
-        telemetry=telemetry,
-        pipeline_depth=pipeline_depth,
-    )
+        assert not chunked, "state_checkpoint families prefill in one launch"
+        engine = StatePagedEngine(
+            api, params, n_slots=prompts.shape[0], max_len=max_len,
+            page_size=page_size, telemetry=telemetry,
+            pipeline_depth=pipeline_depth,
+        )
+    else:
+        from repro.serving.engine import PagedEngine
+
+        engine = PagedEngine(
+            api, params, n_slots=prompts.shape[0], max_len=max_len, page_size=page_size,
+            chunked_prefill=chunked,
+            prefill_chunk=prefill_chunk or 2 * page_size,
+            telemetry=telemetry,
+            pipeline_depth=pipeline_depth,
+        )
     for i in range(prompts.shape[0]):
-        engine.submit(Request(rid=i, prompt=np.asarray(prompts[i]), max_new=gen_len - 1))
+        engine.submit(Request(rid=i, prompt=np.asarray(prompts[i]),
+                              max_new=gen_len - 1, frames=frames))
     finished, _ = engine.run_to_completion()
     out = {r.rid: r.out for r in finished}
     return jnp.asarray([out[i][:gen_len] for i in range(prompts.shape[0])], jnp.int32), engine
 
 
-def run_chaos(api, params, prompts, args, max_len: int) -> dict:
+def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
     """Chaos smoke: a paged engine under deterministic fault injection.
 
     Two submission waves over a slot-constrained engine (so requests
     queue, preempt, and contend for pages) with every fault site armed
     at ``--chaos-rate``; the run must drain with zero unhandled
     exceptions, zero referenced pages, and a clean final audit.  The
-    report JSON is the contract ``tools/check_chaos.py`` validates."""
+    report JSON is the contract ``tools/check_chaos.py`` validates.
+    State-checkpoint families run the same scenario through
+    StatePagedEngine (state/shared_ro pages instead of block tables)."""
     from repro.serving.audit import audit_engine
-    from repro.serving.engine import PagedEngine
     from repro.serving.faults import SITES, FaultInjector
 
     batch = int(prompts.shape[0])
+    spec = getattr(api, "page_spec", None)
+    is_state = spec is not None and spec.layout == "state_checkpoint"
     # transient sites at the full rate; the fatal-per-request sites
     # (logits, sampler — each roll kills a request) at a fifth, so runs
     # keep exercising the healthy path alongside the quarantines
@@ -128,16 +202,31 @@ def run_chaos(api, params, prompts, args, max_len: int) -> dict:
         for s in SITES
     }
     faults = FaultInjector(seed=args.chaos_seed, rates=rates)
-    engine = PagedEngine(
-        api, params, n_slots=batch, max_len=max_len,
-        page_size=args.page_size, chunked_prefill=True,
-        prefill_chunk=args.prefill_chunk or 2 * args.page_size,
-        fault_injector=faults,
-        audit_every=args.audit_every or 4,
-        max_queue=2 * batch,
-        degrade_after=args.degrade_after,
-        pipeline_depth=args.pipeline_depth,
-    )
+    if is_state:
+        from repro.serving.state_engine import StatePagedEngine
+
+        engine = StatePagedEngine(
+            api, params, n_slots=batch, max_len=max_len,
+            page_size=args.page_size,
+            fault_injector=faults,
+            audit_every=args.audit_every or 4,
+            max_queue=2 * batch,
+            degrade_after=args.degrade_after,
+            pipeline_depth=args.pipeline_depth,
+        )
+    else:
+        from repro.serving.engine import PagedEngine
+
+        engine = PagedEngine(
+            api, params, n_slots=batch, max_len=max_len,
+            page_size=args.page_size, chunked_prefill=True,
+            prefill_chunk=args.prefill_chunk or 2 * args.page_size,
+            fault_injector=faults,
+            audit_every=args.audit_every or 4,
+            max_queue=2 * batch,
+            degrade_after=args.degrade_after,
+            pipeline_depth=args.pipeline_depth,
+        )
     # two waves: wave 2 queues behind wave 1, so admission, shedding and
     # preemption all see contention; odd rids fork into 2 siblings
     reqs = []
@@ -148,6 +237,7 @@ def run_chaos(api, params, prompts, args, max_len: int) -> dict:
                 rid=rid, prompt=np.asarray(prompts[i]), max_new=args.gen - 1,
                 n_samples=2 if rid % 2 else 1,
                 deadline_s=args.deadline_s,
+                frames=frames,
             ))
     unhandled = None
     ticks = 0
@@ -171,7 +261,9 @@ def run_chaos(api, params, prompts, args, max_len: int) -> dict:
     finished_rids = {o["rid"] for o in outcomes}
     out = {
         "schema": 1,
+        "arch": args.arch,
         "cache": args.cache,
+        "page_layout": getattr(engine, "PAGE_LAYOUT", "kv"),
         "chaos_seed": args.chaos_seed,
         "chaos_rate": args.chaos_rate,
         "deadline_s": args.deadline_s,
@@ -180,6 +272,10 @@ def run_chaos(api, params, prompts, args, max_len: int) -> dict:
         "ticks": ticks,
         "unhandled_exception": unhandled,
         "leaked_pages": leaked,
+        # live (allocated or parked) pages per kind after the drain —
+        # refcounted pages would be leaks; parked shared_ro/kv prefix
+        # pages are retention by design
+        "pages_by_kind": engine.pool_mgr.used_by_kind(),
         "final_audit": report.to_dict(),
         "health": engine.health(),
         "faults": faults.summary(),
@@ -310,6 +406,14 @@ def main():
     api_q = zoo.build(cfg, rt_w4a4)
     params = api.init(jax.random.PRNGKey(0))
 
+    # paged-serving gate: typed, actionable rejection BEFORE any compute
+    # (e.g. pixtral_12b: the vlm family has no paged path yet)
+    needs_paged = args.paged or args.chaos or args.best_of > 1
+    spec = _check_servable(api_q, cfg) if needs_paged else getattr(
+        api_q, "page_spec", None)
+    is_state = spec is not None and spec.layout == "state_checkpoint"
+    frames = _stub_frames(cfg) if cfg.family == "encdec" else None
+
     # --- PTQ: quantize GEMM weights offline with the frozen codebooks ----
     params_q = ptq.quantize_params(params, cb, bcq_cfg)
     params_q["codebooks"] = cb
@@ -332,15 +436,15 @@ def main():
         # chaos smoke REPLACES the serving comparisons: one W4A4 paged
         # engine with every fault seam armed (docs/ROBUSTNESS.md);
         # tools/check_chaos.py validates the report artifact
-        run_chaos(api_q, params_q, prompts, args, max_len)
+        run_chaos(api_q, params_q, prompts, args, max_len, frames=frames)
         return None
 
     t0 = time.time()
-    ref = greedy_generate(api, params, prompts, args.gen, max_len)
+    ref = generate_contiguous(api, cfg, params, prompts, frames, args.gen, max_len)
     t_ref = time.time() - t0
     t0 = time.time()
-    got = greedy_generate(api_q, params_q, prompts, args.gen, max_len,
-                          kv_bucket=args.kv_bucket)
+    got = generate_contiguous(api_q, cfg, params_q, prompts, frames, args.gen,
+                              max_len, kv_bucket=args.kv_bucket)
     t_q = time.time() - t0
 
     agree = float(jnp.mean((ref == got).astype(jnp.float32)))
@@ -359,7 +463,8 @@ def main():
         params_pk = ptq.pack_params(params, cb, bcq_cfg)
         params_pk["codebooks"] = cb
         t0 = time.time()
-        got_pk = greedy_generate(api_pk, params_pk, prompts, args.gen, max_len)
+        got_pk = generate_contiguous(api_pk, cfg, params_pk, prompts, frames,
+                                     args.gen, max_len)
         t_pk = time.time() - t0
         agree_pk = float(jnp.mean((got_pk == ref).astype(jnp.float32)))
         print(
@@ -368,7 +473,31 @@ def main():
             f"4-bit weight buffers) agreement vs bf16: {agree_pk*100:.1f}%"
         )
 
-    if args.paged:
+    if args.paged and is_state:
+        # state-checkpoint families: the paged reference is the fused
+        # contiguous decode above (same decode batch once all requests
+        # are resident; prefill is per-request, so under fake W4A4 the
+        # activation s_X extent differs — agreement is reported, and
+        # bit-exactness is asserted with batch-invariant math in
+        # tests/test_state_paged.py)
+        t0 = time.time()
+        got_paged, engine = serve_paged(
+            api_q, params_q, prompts, args.gen, max_len, args.page_size,
+            pipeline_depth=args.pipeline_depth, frames=frames,
+        )
+        t_p = time.time() - t0
+        agree_p = float(jnp.mean((got_paged == got).astype(jnp.float32)))
+        snap = engine.snapshot()
+        print(
+            f"paged  : {toks/t_p:8.1f} tok/s (state-checkpoint layout, "
+            f"page={args.page_size}, "
+            f"pages used {_stat(snap, 'pool_peak_pages', 'n/a')}, "
+            f"kinds {engine.pool_mgr.used_by_kind()}, "
+            f"checkpoints {_stat(snap, 'state_checkpoints')}, "
+            f"enc prefix hits {_stat(snap, 'prefix_hits')}) "
+            f"agreement vs contiguous {agree_p*100:.1f}%"
+        )
+    elif args.paged:
         # engine-vs-engine comparison (same per-request prefill and tick
         # batch composition; the fused greedy_generate above quantizes
         # activations over a different batch, so it is not the reference)
@@ -425,7 +554,7 @@ def main():
     if args.paged and (args.metrics_json or args.trace_out or args.quant_probes):
         # telemetry artifacts come from the richest engine run above
         # (chunked if it ran — its journal has per-chunk prefill spans)
-        src = eng_ck if args.chunked_prefill else engine
+        src = eng_ck if (args.chunked_prefill and not is_state) else engine
         tel = src.telemetry
         if args.metrics_json:
             tel.dump_metrics(args.metrics_json, engine=src, probe_sink=probe_sink)
@@ -461,22 +590,32 @@ def main():
     if args.best_of > 1:
         # sequence forking: each prompt prefills ONCE, then forks into
         # --best-of sibling decode branches sharing every prompt page by
-        # refcount; only divergent tail pages are copy-on-write copied
-        from repro.serving.engine import PagedEngine
-
+        # refcount (kv layout: COW-divergent tail pages; state layout:
+        # live-row copies sharing the checkpoint/encoder pages)
         sp = SamplingParams(
             temperature=args.temperature, top_k=args.top_k, seed=args.seed
         )
-        eng_f = PagedEngine(
-            api_q, params_q, n_slots=args.batch * args.best_of,
-            max_len=max_len, page_size=args.page_size,
-            pipeline_depth=args.pipeline_depth,
-        )
+        if is_state:
+            from repro.serving.state_engine import StatePagedEngine
+
+            eng_f = StatePagedEngine(
+                api_q, params_q, n_slots=args.batch * args.best_of,
+                max_len=max_len, page_size=args.page_size,
+                pipeline_depth=args.pipeline_depth,
+            )
+        else:
+            from repro.serving.engine import PagedEngine
+
+            eng_f = PagedEngine(
+                api_q, params_q, n_slots=args.batch * args.best_of,
+                max_len=max_len, page_size=args.page_size,
+                pipeline_depth=args.pipeline_depth,
+            )
         t0 = time.time()
         for i in range(args.batch):
             eng_f.submit(Request(
                 rid=i, prompt=np.asarray(prompts[i]), max_new=args.gen - 1,
-                n_samples=args.best_of, sampling=sp,
+                n_samples=args.best_of, sampling=sp, frames=frames,
             ))
         fin_f, _ = eng_f.run_to_completion()
         t_f = time.time() - t0

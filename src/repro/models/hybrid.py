@@ -160,16 +160,29 @@ def attn_block(x, p, cfg: ArchConfig, rt: Runtime, cb, positions, cache=None, ca
         v = v.reshape(b, s, cfg.n_kv_heads, hd)
         q = layers.rope(q, positions, cfg.rope_theta)
         k = layers.rope(k, positions, cfg.rope_theta)
-        slot = cache_pos % w
-        new_cache = dict(
-            layers.cache_write(
-                {n: cache[n] for n in cache if n != "pos_buf"},
-                k, v, slot, rt.cache_kind, rt.bcq_cfg, cb,
+        kv_cache = {n: cache[n] for n in cache if n != "pos_buf"}
+        if getattr(cache_pos, "ndim", 0) >= 1:
+            # per-row decode (paged state engine): every row sits at its
+            # own absolute position, so each writes its own ring slot
+            slot_r = (cache_pos % w).astype(jnp.int32)  # (B,)
+            new_cache = dict(
+                layers.cache_write_rows(
+                    kv_cache, k, v, slot_r, rt.cache_kind, rt.bcq_cfg, cb
+                )
             )
-        )
-        new_cache["pos_buf"] = jax.lax.dynamic_update_slice(
-            cache["pos_buf"], positions.astype(jnp.int32), (0, slot)
-        )
+            new_cache["pos_buf"] = cache["pos_buf"].at[jnp.arange(b), slot_r].set(
+                positions[:, 0].astype(jnp.int32)
+            )
+        else:
+            slot = cache_pos % w
+            new_cache = dict(
+                layers.cache_write(
+                    kv_cache, k, v, slot, rt.cache_kind, rt.bcq_cfg, cb
+                )
+            )
+            new_cache["pos_buf"] = jax.lax.dynamic_update_slice(
+                cache["pos_buf"], positions.astype(jnp.int32), (0, slot)
+            )
         kf, vf = layers.cache_read(new_cache, rt.cache_kind, rt.bcq_cfg, cb, rt.compute_dtype)
         # attend with absolute-position mask over ring slots
         rep = cfg.n_heads // cfg.n_kv_heads
@@ -307,8 +320,13 @@ def prefill(params, batch, cfg: ArchConfig, rt: Runtime, max_len=None):
 
 
 def decode_step(params, caches, tokens, pos, cfg: ArchConfig, rt: Runtime):
+    """``pos`` may be a scalar (homogeneous batch) or a (B,) array of
+    per-row absolute positions (paged state serving)."""
     b, s = tokens.shape
     x = transformer.embed_tokens(params, tokens, rt)
-    positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if getattr(pos, "ndim", 0) >= 1:
+        positions = pos[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = pos + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     x, caches = hybrid_backbone(params, x, cfg, rt, positions, caches, cache_pos=pos)
     return transformer.lm_logits(params, x, rt), caches

@@ -400,6 +400,44 @@ def cache_write(cache, k_new, v_new, pos, kind, cfg: BCQConfig, cb):
     raise ValueError(kind)
 
 
+def cache_write_rows(cache, k_new, v_new, pos_rows, kind, cfg: BCQConfig, cb):
+    """Insert (B, 1, H, D) keys/values at per-row offsets ``pos_rows`` (B,).
+
+    The per-row sibling of ``cache_write`` for batched decode over rows at
+    heterogeneous positions (the paged state engine: every resident slot
+    sits at its own absolute position).  Row i writes cache[i, pos_rows[i]];
+    quantization is the same per-(token, head)-vector path as
+    ``cache_write``, so the bytes written for a row at position p are
+    bit-identical to a scalar-pos ``cache_write`` of that row at p."""
+    b = k_new.shape[0]
+    rows = jnp.arange(b)
+
+    def put(buf, val):
+        return buf.at[rows, pos_rows].set(val[:, 0].astype(buf.dtype))
+
+    if kind == "bf16":
+        return {"k": put(cache["k"], k_new), "v": put(cache["v"], v_new)}
+    if kind == "int8":
+        kq, ks = _cache_quant_int8(k_new)
+        vq, vs = _cache_quant_int8(v_new)
+        return {
+            "k": put(cache["k"], kq),
+            "v": put(cache["v"], vq),
+            "k_scale": put(cache["k_scale"], ks),
+            "v_scale": put(cache["v_scale"], vs),
+        }
+    if kind == "bcq4":
+        cfg = _cache_cfg(cfg, k_new.shape[-1])
+        out = dict(cache)  # keeps the per-tensor k_sx / v_sx scalars
+        for nm, val, sx in (("k", k_new, cache["k_sx"]), ("v", v_new, cache["v_sx"])):
+            enc = bcq.encode(val.astype(jnp.float32), cb, cfg, s_x=sx)
+            out[f"{nm}_idx"] = put(out[f"{nm}_idx"], enc.packed_idx)
+            out[f"{nm}_sel"] = put(out[f"{nm}_sel"], enc.packed_sel)
+            out[f"{nm}_scale"] = put(out[f"{nm}_scale"], enc.scale_code)
+        return out
+    raise ValueError(kind)
+
+
 def cache_read(cache, kind, cfg: BCQConfig, cb, dtype, valid_len: Optional[int] = None):
     """Dequantize cache → (k, v) in compute dtype.
 
@@ -829,9 +867,20 @@ def attention(
 
     new_cache = None
     if cache is not None:
-        use_flash = rt.flash_decode and rt.mesh is not None and s == 1 and window is None
+        # per-row decode: cache_pos is a (B,) array of heterogeneous
+        # absolute positions (paged state engine) — scatter row-wise and
+        # bound validity per row; the math row i computes is identical to
+        # a scalar-pos decode of that row alone at cache_pos[i].
+        per_row = getattr(cache_pos, "ndim", 0) >= 1
+        use_flash = (
+            rt.flash_decode and rt.mesh is not None and s == 1
+            and window is None and not per_row
+        )
         if use_flash:
             new_cache = cache_write_sharded(cache, k, v, cache_pos, rt, cb)
+        elif per_row:
+            assert s == 1, "per-row cache_pos implies single-token decode"
+            new_cache = cache_write_rows(cache, k, v, cache_pos, rt.cache_kind, rt.bcq_cfg, cb)
         else:
             new_cache = cache_write(cache, k, v, cache_pos, rt.cache_kind, rt.bcq_cfg, cb)
         kf, vf = cache_read(
@@ -839,6 +888,8 @@ def attention(
             valid_len=None if use_flash else kv_bound,
         )
         valid = cache_pos + s
+        if per_row:
+            valid = valid.reshape(b, 1, 1, 1)
         out = None
         if use_flash:
             out = flash_decode_sharded(q, kf, vf, valid, rt)

@@ -39,6 +39,51 @@ MOE_EXPERT_SPEC = "fsdp"
 PARAM_LAYOUT = "fsdp"
 
 
+# Families the paged serving stack can run (either engine).  vlm is the
+# deliberate hole: the vision frontend needs per-request patch embeddings
+# that the paged admission path does not supply.
+SERVABLE_FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec")
+
+
+class UnsupportedModelError(RuntimeError):
+    """A model family without a paged-serving path was asked to serve
+    paged.  Typed and actionable: names the offending family and the
+    supported list so callers can pick a servable config or drop
+    ``--paged``."""
+
+    def __init__(self, name: str, family: str, reason: str = ""):
+        self.family = family
+        self.supported = SERVABLE_FAMILIES
+        msg = (
+            f"model '{name}' (family '{family}') has no paged-serving path; "
+            f"paged-servable families: {', '.join(SERVABLE_FAMILIES)}."
+        )
+        if reason:
+            msg += f" {reason}"
+        super().__init__(msg)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Per-family descriptor of what the page pool holds — the uniform
+    surface engine/audit/telemetry consume instead of assuming pages==KV.
+
+    layout:
+      * ``kv_paged``         — block-table KV pages; token position maps to
+                               (page, slot); COW fork; prefix caching.
+      * ``state_checkpoint`` — one ``state`` page checkpoints a sequence's
+                               whole O(1) recurrent state at page-aligned
+                               positions; preemption replays ≤ page_size−1
+                               tokens from the last checkpoint.
+    kinds: page kinds (pages.PAGE_KINDS strings) the family allocates.
+    shared_encoder: encoder output published to read-only ``shared_ro``
+    pages keyed by input hash (enc-dec)."""
+
+    layout: str
+    kinds: tuple
+    shared_encoder: bool = False
+
+
 @dataclasses.dataclass
 class ModelAPI:
     cfg: ArchConfig
@@ -53,6 +98,22 @@ class ModelAPI:
     pool_init: Callable[..., Any] = None
     # chunked prefill against gathered pages (PagedEngine chunked admission)
     prefill_from_pages_fn: Callable[..., Any] = None
+    # ---- generic paged-serving surface (PR 9) --------------------------
+    # what the pool holds for this family; None → not paged-servable
+    page_spec: PageSpec = None
+    # state_checkpoint families: resident live-cache tree of B rows
+    # (max_len ignored by O(1)-state families) ...
+    live_cache_init: Callable[..., Any] = None
+    # ... and the per-row batched decode over it: (params, live, tokens
+    # (B,1), pos (B,) int32, shared) → (logits (B,1,V), live').  ``shared``
+    # is family context from shared_ro pages (enc-dec: (enc_pool, enc_pids))
+    # or None.
+    state_decode_fn: Callable[..., Any] = None
+    # shared-encoder (shared_ro) surface — enc-dec only
+    encode_xkv_fn: Callable[..., Any] = None
+    enc_pool_init: Callable[..., Any] = None
+    enc_store_fn: Callable[..., Any] = None
+    prefill_with_xkv_fn: Callable[..., Any] = None
 
 
 def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
@@ -76,6 +137,9 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
                     p, t, pool, bt, n_past, ids, cfg, rt, chunk_len=chunk_len
                 )
             ),
+            # vlm keeps the kv machinery but is NOT paged-servable: its
+            # prefill needs patch_embeds the engine cannot synthesize
+            page_spec=None if fam == "vlm" else PageSpec("kv_paged", ("kv",)),
         )
     if fam == "ssm":
         return ModelAPI(
@@ -85,6 +149,11 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
             prefill_fn=lambda p, b, ml: ssm.prefill(p, b, cfg, rt, ml),
             decode_fn=lambda p, c, t, pos: ssm.decode_step(p, c, t, pos, cfg, rt),
             cache_init=lambda bsz, ml: ssm.ssm_cache_stacked(cfg, rt, bsz),
+            page_spec=PageSpec("state_checkpoint", ("state",)),
+            live_cache_init=lambda bsz, ml=None: ssm.ssm_cache_stacked(cfg, rt, bsz),
+            state_decode_fn=lambda p, live, t, pos, shared=None: ssm.decode_step(
+                p, live, t, pos, cfg, rt
+            ),
         )
     if fam == "hybrid":
         return ModelAPI(
@@ -94,6 +163,11 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
             prefill_fn=lambda p, b, ml: hybrid.prefill(p, b, cfg, rt, ml),
             decode_fn=lambda p, c, t, pos: hybrid.decode_step(p, c, t, pos, cfg, rt),
             cache_init=lambda bsz, ml: hybrid.hybrid_cache_init(cfg, rt, bsz),
+            page_spec=PageSpec("state_checkpoint", ("state",)),
+            live_cache_init=lambda bsz, ml=None: hybrid.hybrid_cache_init(cfg, rt, bsz),
+            state_decode_fn=lambda p, live, t, pos, shared=None: hybrid.decode_step(
+                p, live, t, pos, cfg, rt
+            ),
         )
     if fam == "encdec":
         return ModelAPI(
@@ -103,6 +177,23 @@ def build(cfg: ArchConfig, rt: Runtime) -> ModelAPI:
             prefill_fn=lambda p, b, ml: encdec.prefill(p, b, cfg, rt, ml),
             decode_fn=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg, rt),
             cache_init=None,  # produced by prefill (needs enc output)
+            page_spec=PageSpec(
+                "state_checkpoint", ("state", "shared_ro"), shared_encoder=True
+            ),
+            # live rows hold only the decoder self caches; cross K/V is
+            # gathered per tick from shared_ro encoder pages
+            live_cache_init=lambda bsz, ml: {
+                "self": transformer.cache_init_stacked(cfg, rt, bsz, ml)
+            },
+            state_decode_fn=lambda p, live, t, pos, shared: encdec.decode_step_shared(
+                p, live, t, pos, shared[0], shared[1], cfg, rt
+            ),
+            encode_xkv_fn=lambda p, frames: encdec.encode_xkv(p, frames, cfg, rt),
+            enc_pool_init=lambda n_pages: encdec.enc_pool_init(n_pages, cfg, rt),
+            enc_store_fn=encdec.enc_store,
+            prefill_with_xkv_fn=lambda p, b, ml, xkv: encdec.prefill_with_xkv(
+                p, b, cfg, rt, ml, xkv
+            ),
         )
     raise ValueError(fam)
 

@@ -71,23 +71,9 @@ class AuditReport:
         }
 
 
-def audit_engine(engine) -> AuditReport:
-    """One full consistency sweep over (PagePool, PrefixCache, tables)."""
-    pool = engine.pool_mgr
-    prefix = engine.prefix
-    bad: list[str] = []
-
-    free = list(pool.free)
-    free_set = set(free)
-    parked = set(prefix.reclaimable)
-    if len(free) != len(free_set):
-        bad.append("free list contains duplicate page ids")
-    if NULL_PAGE in free_set:
-        bad.append("null page on the free list")
-    if pool.refcount[NULL_PAGE] != 0:
-        bad.append(f"null page refcount {int(pool.refcount[NULL_PAGE])} != 0")
-
-    # ---- gather table references from the engine's slot rows ------------
+def _gather_kv_refs(engine, free_set, bad) -> dict:
+    """kv layout: references = live block-table entries, plus the
+    contiguous-prefix geometry check (live pages exactly cover pos)."""
     table_refs: dict[int, int] = {}
     for i, slot in enumerate(engine.slots):
         row = engine.tables[i]
@@ -107,10 +93,10 @@ def audit_engine(engine) -> AuditReport:
             table_refs[pid] = table_refs.get(pid, 0) + 1
             if pid in free_set:
                 bad.append(f"slot {i} references FREED page {pid}")
-            if pool.refcount[pid] <= 0:
+            if pool_refcount(engine, pid) <= 0:
                 bad.append(
                     f"slot {i} references page {pid} with refcount "
-                    f"{int(pool.refcount[pid])}"
+                    f"{pool_refcount(engine, pid)}"
                 )
         # live entries must be a contiguous prefix of the row covering pos
         n_live = len(live)
@@ -122,6 +108,94 @@ def audit_engine(engine) -> AuditReport:
                 f"slot {i} holds {n_live} pages for pos={slot.pos} "
                 f"(expected {need} or {need + 1})"
             )
+    return table_refs
+
+
+def _gather_state_refs(engine, free_set, bad) -> dict:
+    """state_checkpoint layout: references = per-slot checkpoint + encoder
+    pages, plus refs a preempted-and-requeued request carries through the
+    queue.  Checks kind tags (state vs shared_ro — heterogeneous kinds in
+    ONE pool) and the checkpoint-position geometry (ckpt_pos ≤ pos: a
+    checkpoint never claims to cover tokens the row hasn't consumed)."""
+    pool = engine.pool_mgr
+    refs: dict[int, int] = {}
+
+    def take(pid, want_kind, where):
+        refs[pid] = refs.get(pid, 0) + 1
+        if pid in free_set:
+            bad.append(f"{where} references FREED page {pid}")
+        elif pool_refcount(engine, pid) <= 0:
+            bad.append(
+                f"{where} references page {pid} with refcount "
+                f"{pool_refcount(engine, pid)}"
+            )
+        elif pool.kind_of(pid) != want_kind:
+            bad.append(
+                f"{where} expects a {want_kind!r} page but {pid} is "
+                f"tagged {pool.kind_of(pid)!r}"
+            )
+
+    for i, slot in enumerate(engine.slots):
+        if slot.req is None:
+            if slot.ckpt_page is not None or slot.enc_page is not None:
+                bad.append(
+                    f"empty slot {i} still references pages "
+                    f"(ckpt={slot.ckpt_page}, enc={slot.enc_page})"
+                )
+            if slot.reserved_by is not None:
+                parent = engine.slots[slot.reserved_by]
+                if parent.req is None:
+                    bad.append(
+                        f"slot {i} reserved by empty slot {slot.reserved_by} "
+                        "(abandoned fork reservation)"
+                    )
+            continue
+        if slot.ckpt_page is not None:
+            take(int(slot.ckpt_page), "state", f"slot {i} checkpoint")
+            if not (0 <= slot.ckpt_pos <= slot.pos):
+                bad.append(
+                    f"slot {i} checkpoint covers {slot.ckpt_pos} tokens but "
+                    f"the row holds {slot.pos} (ckpt_pos must be ≤ pos)"
+                )
+        if slot.enc_page is not None:
+            take(int(slot.enc_page), "shared_ro", f"slot {i} encoder page")
+    for k, req in enumerate(engine.queue):
+        carried = getattr(req, "_state_resume", None)
+        if carried is not None:
+            take(int(carried[0]), "state", f"queued request #{k} (rid={req.rid})")
+        enc = getattr(req, "_enc_page", None)
+        if enc is not None:
+            take(int(enc), "shared_ro", f"queued request #{k} (rid={req.rid})")
+    return refs
+
+
+def pool_refcount(engine, pid: int) -> int:
+    return int(engine.pool_mgr.refcount[pid])
+
+
+def audit_engine(engine) -> AuditReport:
+    """One full consistency sweep over (PagePool, PrefixCache, and the
+    engine's page-reference structure — block tables for the kv layout,
+    slot checkpoint/encoder pages for the state_checkpoint layout)."""
+    pool = engine.pool_mgr
+    prefix = engine.prefix
+    bad: list[str] = []
+
+    free = list(pool.free)
+    free_set = set(free)
+    parked = set(prefix.reclaimable)
+    if len(free) != len(free_set):
+        bad.append("free list contains duplicate page ids")
+    if NULL_PAGE in free_set:
+        bad.append("null page on the free list")
+    if pool.refcount[NULL_PAGE] != 0:
+        bad.append(f"null page refcount {int(pool.refcount[NULL_PAGE])} != 0")
+
+    # ---- gather page references from the engine's layout ----------------
+    if getattr(engine, "PAGE_LAYOUT", "kv") == "state":
+        table_refs = _gather_state_refs(engine, free_set, bad)
+    else:
+        table_refs = _gather_kv_refs(engine, free_set, bad)
 
     # ---- per-page conservation ------------------------------------------
     for pid in range(1, pool.n_pages):
@@ -131,7 +205,7 @@ def audit_engine(engine) -> AuditReport:
             bad.append(f"page {pid} refcount {rc} < 0")
         if rc != refs:
             bad.append(
-                f"page {pid} refcount {rc} != {refs} block-table references"
+                f"page {pid} refcount {rc} != {refs} engine references"
             )
         is_free = pid in free_set
         is_parked = pid in parked

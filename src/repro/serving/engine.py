@@ -310,6 +310,10 @@ class _InFlight:
 class PagedEngine:
     """Fixed-slot continuous batching over a shared paged KV pool."""
 
+    # page layout this engine serves (audit/telemetry dispatch on it);
+    # StatePagedEngine overrides with "state"
+    PAGE_LAYOUT = "kv"
+
     def __init__(
         self,
         api,
@@ -336,40 +340,27 @@ class PagedEngine:
         recover_after: int = 16,
         degraded_prefix_target: int = 0,
     ):
-        assert api.paged_decode_fn is not None, "family has no paged serving path"
+        if api.paged_decode_fn is None:
+            # typed and actionable instead of an assert: names the family
+            # and the servable list (models.zoo.UnsupportedModelError)
+            from repro.models.zoo import UnsupportedModelError
+
+            cfg = getattr(api, "cfg", None)
+            raise UnsupportedModelError(
+                getattr(cfg, "name", "?"), getattr(cfg, "family", "?"),
+                reason="This engine serves kv_paged layouts; state-checkpoint "
+                "families serve through serving.state_engine.StatePagedEngine.",
+            )
         assert max_len % page_size == 0, "page_size must divide max_len"
-        self.api = api
-        self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.ps = page_size
-        self.maxp = max_len // page_size
-        self.eos = eos_id
-        self.prefix_caching = prefix_caching
+        self._init_shared(
+            api, params, n_slots, max_len, page_size, eos_id, prefix_caching,
+            profile_sync, pipeline_depth, telemetry, fault_injector, strict,
+            nan_guard, audit_every, max_queue, shed_stuck, degrade_after,
+            recover_after, degraded_prefix_target,
+        )
         self.chunked = chunked_prefill
         self.prefill_chunk = prefill_chunk
-        # profile_sync: block on every prefill launch so the per-tick
-        # latency split (stats t_prefill_s / t_decode_s) attributes device
-        # time exactly — otherwise a mid-prompt launch's device work drains
-        # inside the decode tick's sync and skews the split.  Off by
-        # default: production keeps host/device overlap (benches opt in).
-        self.profile_sync = profile_sync
-        # pipeline_depth: dispatch queue depth of the tick loop.  1 (the
-        # default) syncs each decode launch inside its own step() — the
-        # legacy synchronous loop, and what profile_sync needs for exact
-        # per-tick attribution (profile_sync therefore forces depth 1).
-        # Depth 2 enqueues tick t+1's launch BEFORE syncing tick t's
-        # tokens, so host scheduling/bookkeeping overlaps device compute:
-        # the consumed token chains launch-to-launch on device (see
-        # _make_fused_decode), dataflow on the page pool keeps device
-        # ordering, and the NaN-quarantine / sampler fault seams consume
-        # tick t's row stats one tick late WITHOUT changing which request
-        # gets demoted (they key on the launch tick).  Tokens are
-        # bit-identical across depths; callers reading ``req.out`` between
-        # manual step() calls on a deep engine should ``drain()`` first
-        # (run_to_completion drains on exit).
-        assert pipeline_depth >= 1, "pipeline_depth must be >= 1"
-        self.pipeline_depth = 1 if profile_sync else pipeline_depth
+        self.maxp = max_len // page_size
         if chunked_prefill:
             assert api.prefill_from_pages_fn is not None, (
                 "family has no chunked-prefill path"
@@ -389,10 +380,6 @@ class PagedEngine:
 
         self.slots = [_PagedSlot() for _ in range(n_slots)]
         self.tables = np.full((n_slots, self.maxp), NULL_PAGE, np.int32)
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
-        self._next_tok = np.zeros((n_slots,), np.int32)
-        self._admit_counter = 0
         self._prefill, c_pre = api_jit(
             api, ("prefill", max_len),
             lambda p, t, _a=api, _ml=max_len: _a.prefill_fn(p, {"tokens": t}, _ml),
@@ -419,6 +406,57 @@ class PagedEngine:
         self._trace_counters = {"prefill": c_pre, "decode": c_dec}
         self._trace_base = {k: v["traces"] for k, v in self._trace_counters.items()}
         self._trace_base["chunk"] = self._chunk_traces_total()
+        self._packed = np.zeros((n_slots, 3 + self.tables.shape[1]), np.int32)
+
+    def _init_shared(
+        self, api, params, n_slots, max_len, page_size, eos_id,
+        prefix_caching, profile_sync, pipeline_depth, telemetry,
+        fault_injector, strict, nan_guard, audit_every, max_queue,
+        shed_stuck, degrade_after, recover_after, degraded_prefix_target,
+    ):
+        """Layout-independent engine state: the request lifecycle (queue /
+        finished / lifecycle guard anchors), telemetry counters, fault
+        containment config, and the pipelined tick machinery.  Shared by
+        PagedEngine (kv_paged layout) and StatePagedEngine
+        (state_checkpoint layout) — everything page-layout-specific (pool
+        trees, block tables / slot records, the jitted steps) stays in the
+        concrete engine's __init__."""
+        self.api = api
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ps = page_size
+        self.eos = eos_id
+        self.prefix_caching = prefix_caching
+        # defaults a state-layout engine keeps; PagedEngine overwrites
+        self.chunked = False
+        self.prefill_chunk = 0
+        # profile_sync: block on every prefill launch so the per-tick
+        # latency split (stats t_prefill_s / t_decode_s) attributes device
+        # time exactly — otherwise a mid-prompt launch's device work drains
+        # inside the decode tick's sync and skews the split.  Off by
+        # default: production keeps host/device overlap (benches opt in).
+        self.profile_sync = profile_sync
+        # pipeline_depth: dispatch queue depth of the tick loop.  1 (the
+        # default) syncs each decode launch inside its own step() — the
+        # legacy synchronous loop, and what profile_sync needs for exact
+        # per-tick attribution (profile_sync therefore forces depth 1).
+        # Depth 2 enqueues tick t+1's launch BEFORE syncing tick t's
+        # tokens, so host scheduling/bookkeeping overlaps device compute:
+        # the consumed token chains launch-to-launch on device (see
+        # _make_fused_decode), dataflow on the page pool keeps device
+        # ordering, and the NaN-quarantine / sampler fault seams consume
+        # tick t's row stats one tick late WITHOUT changing which request
+        # gets demoted (they key on the launch tick).  Tokens are
+        # bit-identical across depths; callers reading ``req.out`` between
+        # manual step() calls on a deep engine should ``drain()`` first
+        # (run_to_completion drains on exit).
+        assert pipeline_depth >= 1, "pipeline_depth must be >= 1"
+        self.pipeline_depth = 1 if profile_sync else pipeline_depth
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._next_tok = np.zeros((n_slots,), np.int32)
+        self._admit_counter = 0
         # telemetry: registry counters replace the old hand-maintained
         # stats dict; ``self.stats`` stays readable as a Mapping view with
         # the same keys/values (peak_pages reads the PagePool's own
@@ -477,11 +515,10 @@ class PagedEngine:
         # _chained[i]: slot i's next token lives in _chain_tok (its launch
         # is still in flight), not in the host _next_tok row.
         # _packed: reused host staging buffer for the consolidated
-        # per-tick transfer (token / source flag / length / block table).
+        # per-tick transfer (built by the concrete engine's __init__).
         self._inflight: deque = deque()
         self._chain_tok = jnp.zeros((n_slots,), jnp.int32)
         self._chained = np.zeros((n_slots,), bool)
-        self._packed = np.zeros((n_slots, 3 + self.tables.shape[1]), np.int32)
         # host-gap attribution: launch-to-launch wall clock minus the sync
         # waits in between = pure host scheduling time (the bench's
         # device-bound assertion reads the resulting histogram)
@@ -573,6 +610,7 @@ class PagedEngine:
         reservations), stamp the typed error, count it, finish."""
         if slot is not None:
             self._free_slot(slot)
+        self._release_carried(req)  # page refs a queued resumed req holds
         req.error = RequestError(kind, msg)
         req.done = True
         if kind in self._cr:
@@ -719,11 +757,13 @@ class PagedEngine:
         )
 
     # ------------------------------------------------------- page plumbing
-    def _alloc_page(self) -> Optional[int]:
-        """Allocate a page, evicting reclaimable prefix pages LRU-first."""
+    def _alloc_page(self, kind: str = pages_lib.KIND_KV) -> Optional[int]:
+        """Allocate a page of ``kind``, evicting reclaimable prefix pages
+        LRU-first (the freed ids re-alloc as any kind — one budget across
+        heterogeneous page kinds)."""
         if self.faults is not None and self.faults.alloc_fails(self._tick):
             return None  # injected transient exhaustion (chaos testing)
-        pid = self.pool_mgr.alloc()
+        pid = self.pool_mgr.alloc(kind)
         while pid is None:
             victim = self.prefix.evict_one()
             if victim is None:
@@ -731,9 +771,21 @@ class PagedEngine:
             self._c["prefix_evictions"].inc()
             self.telemetry.instant("prefix_evict", page=int(victim))
             self.pool_mgr.release(victim)
-            pid = self.pool_mgr.alloc()
+            pid = self.pool_mgr.alloc(kind)
         # (peak tracking lives in PagePool.alloc — see pages.PagePool.peak)
         return pid
+
+    # ---------------------------------------------- layout-subclass hooks
+    def _carry_resume_state(self, slot, resumed: Request) -> None:
+        """Preemption hook: move page refs the resumed request should keep
+        across the queue round-trip.  The KV layout carries nothing — its
+        preemption is pure recompute (prefix hits soften the replay); the
+        state-checkpoint layout overrides this to hand over the checkpoint
+        and shared-encoder pages."""
+
+    def _release_carried(self, req: Request) -> None:
+        """Teardown hook: drop page refs a QUEUED request carries (only a
+        preempted-and-resumed state-layout request holds any)."""
 
     def _drop_page(self, pid: int):
         if pid == NULL_PAGE:
@@ -1144,6 +1196,7 @@ class PagedEngine:
             prompt=np.concatenate([np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)]),
             max_new=req.max_new,
             out=req.out,
+            frames=req.frames,
             sampling=req.sampling,
             n_samples=req.n_samples,
             sample_idx=req.sample_idx,
@@ -1161,6 +1214,11 @@ class PagedEngine:
             _admit_retries=req._admit_retries,
         )
         req._resumed_as = resumed  # cancel() on the old handle still lands
+        # layout hook: a state-checkpoint engine moves the victim's
+        # checkpoint/encoder page refs onto the resumed request BEFORE the
+        # slot teardown drops them — bounded replay instead of full
+        # recompute (no-op for the KV layout)
+        self._carry_resume_state(slot, resumed)
         self._free_slot(victim)
         self.queue.appendleft(resumed)
         self._c["preemptions"].inc()

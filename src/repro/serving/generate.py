@@ -119,6 +119,13 @@ class Request:
     n_samples: int = 1
     sample_idx: int = 0
     error: Optional[str] = None
+    # non-token conditioning for shared-encoder families (enc-dec): stub
+    # frame embeddings (T_enc, D).  The state engine keys its read-only
+    # encoder page on these bytes, so identical frames across requests
+    # share one encode; carried verbatim through preemption/resubmission.
+    frames: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # --- lifecycle guard (None = unbounded) ---
     deadline_s: Optional[float] = None
     max_output_stall_ticks: Optional[int] = None

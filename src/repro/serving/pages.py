@@ -1,17 +1,38 @@
-"""Page allocator + block-table page ops for the paged KV-cache.
+"""Page allocator + block-table page ops for the paged quantized-state store.
 
-The **page** is the unit of KV memory management (vLLM-style): a fixed
-block of ``page_size`` tokens × n_kv heads × head_dim per layer, stored in
-whatever the Runtime's cache kind is (bf16 / int8 / packed-BCQ4) with its
-per-page scale/selector metadata riding along — the pool tree is literally
-``cache_init(n_pages, page_size, ...)`` stacked over layers, so all three
-quant layouts come for free.  ``page_size · d_head`` is always an integer
-number of BCQ block arrays (L_A scalars), so a page boundary never splits
-a block array and pages dequantize independently.
+The **page** is the unit of state memory management (vLLM-style).  For
+attention KV it is a fixed block of ``page_size`` tokens × n_kv heads ×
+head_dim per layer, stored in whatever the Runtime's cache kind is
+(bf16 / int8 / packed-BCQ4) with its per-page scale/selector metadata
+riding along — the pool tree is literally ``cache_init(n_pages,
+page_size, ...)`` stacked over layers, so all three quant layouts come
+for free.  ``page_size · d_head`` is always an integer number of BCQ
+block arrays (L_A scalars), so a page boundary never splits a block
+array and pages dequantize independently.
+
+Since PR 9 a page is a *typed* unit of any quantized state, not only KV.
+``PagePool`` tracks a **kind** per live page:
+
+- ``kv``        — attention KV block (the original layout); mutable,
+                  COW-forked, prefix-cacheable.
+- ``state``     — an O(1)-per-sequence recurrent-state checkpoint (SSM
+                  ssm/conv state, RG-LRU + window ring, enc-dec decoder
+                  state) written at page-aligned positions; mutable only
+                  by its owning engine slot's checkpoint scatter.
+- ``shared_ro`` — read-only shared context (e.g. Whisper encoder output
+                  keyed by input hash via the prefix cache); immutable
+                  after publish, multi-owner by refcount only (never
+                  COW — there is nothing to diverge).
+
+The kind axis is pure host bookkeeping: the device trees that back each
+kind live in separate pools (the KV pool tree, a ``StateStore`` pool, an
+encoder-output pool), but share one id space / free list / refcount
+array so admission control, watermarks, auditing, and telemetry see a
+single budget across heterogeneous kinds.
 
 Page id 0 is reserved as the **null page**: block-table padding and
 inactive decode slots point at it, so scatters from idle slots land in a
-sacrificial page instead of live data.
+sacrificial page instead of live data.  The null page has no kind.
 
 ``PagePool`` is the host-side allocator (free list + refcounts; shared
 prefix pages are refcounted and copy-on-write).  A page may be
@@ -26,10 +47,17 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 NULL_PAGE = 0
+
+# Typed page kinds (see module docstring).
+KIND_KV = "kv"
+KIND_STATE = "state"
+KIND_SHARED_RO = "shared_ro"
+PAGE_KINDS = (KIND_KV, KIND_STATE, KIND_SHARED_RO)
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -56,6 +84,10 @@ class PagePool:
         assert self.n_pages >= 2, "need at least the null page + one real page"
         self.free: list[int] = list(range(self.n_pages - 1, 0, -1))
         self.refcount = np.zeros(self.n_pages, np.int32)
+        # per-page kind tag; None for the null page and free pages.  A
+        # parked (refcount-0, reclaimable) page keeps its kind so revive()
+        # hands back the same typed content it parked.
+        self.kind: list[str | None] = [None] * self.n_pages
         # high-water mark of used() — owned HERE so every allocation path
         # (engine, future fork/COW refactors, direct pool users) updates
         # it; the telemetry gauge reads this, not an engine-side shadow
@@ -65,27 +97,38 @@ class PagePool:
     def available(self) -> int:
         return len(self.free)
 
-    def alloc(self) -> int | None:
-        """Pop a free page with refcount 1, or None when dry."""
+    def alloc(self, kind: str = KIND_KV) -> int | None:
+        """Pop a free page of ``kind`` with refcount 1, or None when dry."""
+        assert kind in PAGE_KINDS, kind
         if not self.free:
             return None
         pid = self.free.pop()
         assert self.refcount[pid] == 0
         self.refcount[pid] = 1
+        self.kind[pid] = kind
         # used() only ever grows through alloc() (revive() re-activates a
         # parked page that already counts as used), so this is the one
         # place the high-water mark can advance
         self.peak = max(self.peak, self.used())
         return pid
 
+    def kind_of(self, pid: int) -> str | None:
+        return self.kind[pid]
+
     def ref(self, pid: int) -> None:
         assert pid != NULL_PAGE and self.refcount[pid] > 0
         self.refcount[pid] += 1
 
-    def revive(self, pid: int) -> None:
+    def revive(self, pid: int, kind: str | None = None) -> None:
         """Re-activate a reclaimable page (refcount 0, parked outside the
-        free list by the prefix cache) without touching its contents."""
+        free list by the prefix cache) without touching its contents.
+        When ``kind`` is given, assert the parked page is of that kind —
+        a shared_ro hit must never revive a parked KV page."""
         assert pid != NULL_PAGE and self.refcount[pid] == 0 and pid not in self.free
+        if kind is not None:
+            assert self.kind[pid] == kind, (
+                f"revive kind mismatch: page {pid} is {self.kind[pid]!r}, "
+                f"expected {kind!r}")
         self.refcount[pid] = 1
 
     def deref(self, pid: int) -> bool:
@@ -96,10 +139,21 @@ class PagePool:
     def release(self, pid: int) -> None:
         """Return a refcount-0 page to the free list."""
         assert pid != NULL_PAGE and self.refcount[pid] == 0
+        self.kind[pid] = None
         self.free.append(pid)
 
     def used(self) -> int:
         return self.n_pages - 1 - len(self.free)
+
+    def used_by_kind(self) -> dict[str, int]:
+        """Live (allocated or parked) page count per kind."""
+        counts = {k: 0 for k in PAGE_KINDS}
+        in_free = set(self.free)
+        for pid in range(1, self.n_pages):
+            k = self.kind[pid]
+            if k is not None and pid not in in_free:
+                counts[k] += 1
+        return counts
 
 
 # ----------------------------------------------------------- jnp page ops
@@ -139,3 +193,122 @@ def copy_page(pool, src, dst):
 
 def as_block_table_array(tables: np.ndarray) -> jnp.ndarray:
     return jnp.asarray(tables, jnp.int32)
+
+
+# ----------------------------------------------------- state-page tree ops
+#
+# A **state page** checkpoints one sequence's entire O(1) recurrent state
+# (whatever pytree the family's ``cache_init`` builds for batch 1) at a
+# page-aligned position.  The ops below are generic over the tree: the
+# per-leaf batch axis is discovered by shape-diffing ``cache_init`` at two
+# batch sizes, so new families (and new quantized state layouts — the
+# leaves keep their dtypes verbatim, int8/bcq4 included) need zero code
+# here.  Leaves whose shape does not depend on batch (per-tensor scales,
+# 0-dim s_x scalars) get axis −1 and are carried through untouched: they
+# are pool-global, exactly like the < 3-dim leaves in
+# ``scatter_prefill_pages`` above.
+
+REPLICATED = -1  # sentinel batch axis for batch-independent leaves
+
+
+def state_batch_axes(cache_init_fn):
+    """Per-leaf batch-axis tree for ``cache_init_fn(batch) -> tree``.
+
+    Uses ``jax.eval_shape`` (no allocation) at batch 1 vs 3 and takes the
+    first axis whose extent differs; ``REPLICATED`` when none does."""
+    # close over the batch size: cache_init builds shapes from it, so it
+    # must stay a static python int, not an eval_shape tracer
+    s1 = jax.eval_shape(lambda: cache_init_fn(1))
+    s3 = jax.eval_shape(lambda: cache_init_fn(3))
+
+    def axis(a, b):
+        assert len(a.shape) == len(b.shape), (a.shape, b.shape)
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                assert x == 1 and y == 3, (
+                    f"batch axis must scale 1:1 with batch, got {a.shape} "
+                    f"vs {b.shape} at axis {i}")
+                return i
+        return REPLICATED
+
+    return jax.tree.map(axis, s1, s3)
+
+
+def state_pool_init(cache_init_fn, axes, n_pages: int):
+    """Device pool for state pages: each leaf gets the batch axis moved
+    to the front and widened to ``n_pages`` (page id indexes it); leaves
+    with ``REPLICATED`` axis are stored once, straight from batch 1."""
+    one = cache_init_fn(1)
+
+    def build(leaf, ax):
+        if ax == REPLICATED:
+            return leaf
+        shape = (n_pages,) + leaf.shape[:ax] + leaf.shape[ax + 1:]
+        return jnp.zeros(shape, leaf.dtype)
+
+    return jax.tree.map(build, one, axes)
+
+
+def state_checkpoint_rows(pool, live, axes, dsts):
+    """Scatter every live row's state into its destination page.
+
+    ``live`` is the engine's resident batch-B cache tree; ``dsts`` is a
+    (B,) int32 page id per row.  Rows whose destination is ``NULL_PAGE``
+    (idle slots, alloc-starved checkpoints) land in the sacrificial null
+    page — shape-stable, no host branching."""
+
+    def scat(pl, lv, ax):
+        if ax == REPLICATED:
+            return pl
+        return pl.at[dsts].set(jnp.moveaxis(lv, ax, 0).astype(pl.dtype))
+
+    return jax.tree.map(scat, pool, live, axes)
+
+
+def state_restore_row(live, pool, axes, row, pid):
+    """Write page ``pid``'s checkpoint into row ``row`` of the live tree.
+    ``row``/``pid`` may be traced scalars (one compilation for all)."""
+
+    def rest(lv, pl, ax):
+        if ax == REPLICATED:
+            return lv
+        one = jax.lax.dynamic_index_in_dim(pl, pid, 0, keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(
+            lv, jnp.moveaxis(one, 0, ax).astype(lv.dtype), row, axis=ax)
+
+    return jax.tree.map(rest, live, pool, axes)
+
+
+def state_extract_row(live, axes, row):
+    """Slice row ``row`` out of the live tree as a batch-1 tree."""
+
+    def ext(lv, ax):
+        if ax == REPLICATED:
+            return lv
+        return jax.lax.dynamic_slice_in_dim(lv, row, 1, axis=ax)
+
+    return jax.tree.map(ext, live, axes)
+
+
+def state_insert_row(live, one, axes, row):
+    """Write a batch-1 tree into row ``row`` of the live tree."""
+
+    def ins(lv, on, ax):
+        if ax == REPLICATED:
+            return lv
+        return jax.lax.dynamic_update_slice_in_dim(
+            lv, on.astype(lv.dtype), row, axis=ax)
+
+    return jax.tree.map(ins, live, one, axes)
+
+
+def state_copy_row(live, axes, src, dst):
+    """Duplicate live row ``src`` into row ``dst`` (fork siblings)."""
+
+    def cp(lv, ax):
+        if ax == REPLICATED:
+            return lv
+        one = jax.lax.dynamic_slice_in_dim(lv, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(lv, one, dst, axis=ax)
+
+    return jax.tree.map(cp, live, axes)

@@ -442,6 +442,12 @@ class Telemetry:
         g("queue_depth", "requests").set(len(engine.queue))
         g("active_slots", "slots").set(len(engine._active()))
         g("degraded_mode").set(int(getattr(engine, "degraded", False)))
+        # per-kind pool occupancy: one budget across heterogeneous page
+        # kinds (kv / state / shared_ro), so capacity planning needs the
+        # split, not just the total
+        by_kind = engine.pool_mgr.used_by_kind()
+        for kind, n in by_kind.items():
+            g(f"pool_pages_{kind}", "pages").set(n)
 
     def snapshot(self, engine=None, probe_sink=None) -> dict:
         """One JSON-able dump of everything (the --metrics-json payload)."""

@@ -38,21 +38,28 @@ def _paged_engine_leak_check(request):
     try:
         from repro.serving.audit import audit_engine
         from repro.serving.engine import PagedEngine
+        from repro.serving.state_engine import StatePagedEngine
     except Exception:  # pragma: no cover - serving deps unavailable
         yield
         return
     engines = []
-    orig_init = PagedEngine.__init__
+    # StatePagedEngine defines its own __init__ (it never chains to
+    # PagedEngine.__init__), so both constructors must be wrapped.
+    originals = []
+    for klass in (PagedEngine, StatePagedEngine):
+        orig_init = klass.__init__
 
-    def tracking_init(self, *args, **kwargs):
-        orig_init(self, *args, **kwargs)
-        engines.append(self)
+        def tracking_init(self, *args, __orig=orig_init, **kwargs):
+            __orig(self, *args, **kwargs)
+            engines.append(self)
 
-    PagedEngine.__init__ = tracking_init
+        originals.append((klass, orig_init))
+        klass.__init__ = tracking_init
     try:
         yield
     finally:
-        PagedEngine.__init__ = orig_init
+        for klass, orig_init in originals:
+            klass.__init__ = orig_init
     if request.node.get_closest_marker("no_leak_check"):
         return
     for eng in engines:

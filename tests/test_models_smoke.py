@@ -130,6 +130,58 @@ def test_decode_matches_parallel_mamba():
         )
 
 
+def test_decode_matches_parallel_recurrentgemma():
+    """Hybrid (LRU recurrence + windowed attention) cache decode == the
+    parallel forward at every position."""
+    cfg = get_smoke("recurrentgemma_9b")
+    api = zoo.build(cfg, RT)
+    params = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, 16), 0, cfg.vocab)
+    from repro.models import hybrid, transformer
+    x = transformer.embed_tokens(params, tokens, RT)
+    pos = jnp.broadcast_to(jnp.arange(16)[None, :], (1, 16))
+    h, _ = hybrid.hybrid_backbone(params, x, cfg, RT, pos)
+    full_logits = transformer.lm_logits(params, h, RT)
+    lg, caches = api.prefill_fn(params, {"tokens": tokens[:, :8]}, 16)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full_logits[:, 7]), rtol=5e-3, atol=5e-3
+    )
+    for t in range(8, 16):
+        lg, caches = api.decode_fn(params, caches, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full_logits[:, t]), rtol=5e-3, atol=5e-3
+        )
+
+
+def test_decode_matches_parallel_whisper():
+    """Enc-dec cache decode (self KV + precomputed cross K/V) == the
+    parallel teacher-forced decoder pass over the same encoder output."""
+    cfg = get_smoke("whisper_base")
+    api = zoo.build(cfg, RT)
+    params = api.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, 16), 0, cfg.vocab)
+    frames = (
+        jax.random.normal(jax.random.PRNGKey(7), (1, cfg.encoder_len, cfg.d_model))
+        * 0.02
+    )
+    from repro.models import encdec, transformer
+    enc_out = encdec.encode(params, frames, cfg, RT)
+    pos = jnp.broadcast_to(jnp.arange(16)[None, :], (1, 16))
+    h, _ = encdec.decoder(params, tokens, enc_out, cfg, RT, pos)
+    full_logits = transformer.lm_logits(params, h, RT)
+    lg, caches = api.prefill_fn(
+        params, {"tokens": tokens[:, :8], "frames": frames}, 16
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full_logits[:, 7]), rtol=5e-3, atol=5e-3
+    )
+    for t in range(8, 16):
+        lg, caches = api.decode_fn(params, caches, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full_logits[:, t]), rtol=5e-3, atol=5e-3
+        )
+
+
 @pytest.mark.parametrize("cache_kind", ["int8", "bcq4"])
 def test_quantized_kv_cache_close(cache_kind):
     """int8 / packed-BCQ4 KV caches stay close to the bf16 cache decode."""

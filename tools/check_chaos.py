@@ -70,6 +70,22 @@ def check_report(path: str) -> None:
         if kind is None and o["n_out"] <= 0:
             fail(f"{path}: rid {o['rid']} finished clean with no output")
 
+    # --- per-kind page accounting ----------------------------------------
+    # one pool serves heterogeneous kinds: kv block-table pages (kv_paged
+    # layout), state checkpoints + read-only shared encoder pages
+    # (state_checkpoint layout).  After the drain only parked reclaimable
+    # pages may stay live, and a layout must not hold the other's kinds.
+    kinds = rep.get("pages_by_kind")
+    if not isinstance(kinds, dict) or set(kinds) != {"kv", "state", "shared_ro"}:
+        fail(f"{path}: pages_by_kind missing or malformed: {kinds!r}")
+    if any(not isinstance(v, int) or v < 0 for v in kinds.values()):
+        fail(f"{path}: negative/non-integer per-kind page count {kinds}")
+    layout = rep.get("page_layout", "kv")
+    wrong = {"kv": ("state", "shared_ro"), "state": ("kv",)}.get(layout, ())
+    for k in wrong:
+        if kinds[k] != 0:
+            fail(f"{path}: layout {layout!r} holds {kinds[k]} {k!r} page(s)")
+
     # --- internal consistency --------------------------------------------
     faults = rep["faults"]
     if set(faults["by_site"]) - FAULT_SITES:
@@ -97,11 +113,11 @@ def check_report(path: str) -> None:
         if o["error_kind"]:
             errs[o["error_kind"]] = errs.get(o["error_kind"], 0) + 1
     print(
-        f"check_chaos: {path} OK (cache={rep['cache']}, "
+        f"check_chaos: {path} OK (cache={rep['cache']}, layout={layout}, "
         f"seed={rep['chaos_seed']}, rate={rep['chaos_rate']}: "
         f"{len(rep['requests'])} finished / {rep['ticks']} ticks, "
         f"{faults['total']} faults {faults['by_site']}, errors {errs or '{}'}, "
-        f"0 leaks, audit clean)"
+        f"pages by kind {kinds}, 0 leaks, audit clean)"
     )
 
 

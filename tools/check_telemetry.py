@@ -31,6 +31,10 @@ REQUIRED_GAUGES = (
     "pool_pages_used", "pool_pages_free", "pool_peak_pages",
     "prefix_reclaimable_pages", "prefix_registered_pages",
     "watermark_headroom", "queue_depth", "active_slots",
+    # per-kind pool occupancy: one page budget shared across
+    # heterogeneous kinds (kv block-table pages, state checkpoints,
+    # read-only shared encoder pages)
+    "pool_pages_kv", "pool_pages_state", "pool_pages_shared_ro",
 )
 # name → exact bucket edges (mirrors repro.serving.telemetry — kept
 # literal here so the checker stands alone)
@@ -68,6 +72,13 @@ def check_metrics(path: str) -> None:
     for name in REQUIRED_GAUGES:
         if name not in snap["gauges"]:
             fail(f"{path}: gauge {name!r} missing")
+    kinds = {k: snap["gauges"][f"pool_pages_{k}"]
+             for k in ("kv", "state", "shared_ro")}
+    if any(v < 0 for v in kinds.values()):
+        fail(f"{path}: negative per-kind page gauge {kinds}")
+    if sum(kinds.values()) != snap["gauges"]["pool_pages_used"]:
+        fail(f"{path}: per-kind pages {kinds} do not sum to "
+             f"pool_pages_used={snap['gauges']['pool_pages_used']}")
     for name, edges in REQUIRED_HISTOGRAMS.items():
         h = snap["histograms"].get(name)
         if h is None:
