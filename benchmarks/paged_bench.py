@@ -50,6 +50,16 @@ Columns (per cache kind, in ``BENCH_paged.json``):
   ``telemetry_overhead_pct`` — the same warm workload with full
   ("default") telemetry vs counters-only; the acceptance bar is < 2%
   overhead, zero extra device syncs, zero extra traces,
+* ``swap_preempt_exact`` / ``swap_bytes_moved`` /
+  ``swap_recompute_flops_avoided`` — a preemption-heavy pass on a
+  host-tier (``host_pages``) engine vs the recompute-only baseline:
+  both must reproduce the uninterrupted tokens bit-exactly, and the
+  economics column weighs PCIe bytes swapped against the prefill
+  compute the verified swap-ins skipped (measured as the two engines'
+  ``prefill_tokens`` difference on identical schedules); the state
+  rows add ``host_replay_tokens`` (gated **zero** — the live-state
+  snapshot resumes without replaying) and the same bytes-vs-FLOPs
+  pair,
 * ``tok_s_guards_on`` / ``tok_s_guards_off`` / ``guard_overhead_pct`` —
   the same warm workload with the robustness guards armed (NaN logits
   guard + invariant audit every 4 ticks, docs/ROBUSTNESS.md) vs both
@@ -436,6 +446,46 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         eng_ind.submit(Request(rid=s, prompt=fork_prompt, max_new=args.gen))
     eng_ind.run_to_completion()
 
+    # snapshot the profile engine's trace deltas NOW: the timed passes
+    # are over, and the preemption pass below legitimately compiles new
+    # resume shape buckets that must not count against the
+    # steady-state "timed passes never retrace" gate
+    traces_profile = eng_prof.trace_counts()
+
+    # ---- host-tier preemption economics: the same workload under a
+    # preemption-heavy schedule on a swap-enabled engine vs the
+    # recompute-only baseline.  Both must stay BIT-IDENTICAL to the
+    # uninterrupted outputs (swap restores the exact quantized pages;
+    # recompute regenerates them); the economics column weighs PCIe
+    # bytes moved against the prefill compute the verified swap-ins
+    # made unnecessary — measured, not modeled: the two engines serve
+    # identical schedules, so their prefill_tokens difference IS the
+    # recompute the swap path skipped.
+    def preempt_heavy(engine, batch_reqs, offset):
+        for r2 in batch_reqs:
+            engine.submit(r2)
+        for _ in range(3):
+            for _ in range(3):
+                engine.step()
+            engine.drain()
+            engine._preempt_one(None)
+        fin, _ = engine.run_to_completion()
+        assert all(r2.error is None for r2 in fin)
+        return {r2.rid - offset: r2.out for r2 in fin}
+
+    host_pages = args.slots * (max_len // ps)  # room for every carry
+    eng_swap = mk_paged(chunked_prefill=True, prefill_chunk=chunk,
+                        host_pages=host_pages)
+    out_swap = preempt_heavy(eng_swap, fresh_reqs(offset=700), 700)
+    eng_rec = mk_paged(chunked_prefill=True, prefill_chunk=chunk)
+    out_rec = preempt_heavy(eng_rec, fresh_reqs(offset=800), 800)
+    swap_preempt_exact = out_swap == out_p and out_rec == out_p
+    sw = eng_swap.health()["swap"]
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    swap_tokens_avoided = (
+        eng_rec.stats["prefill_tokens"] - eng_swap.stats["prefill_tokens"]
+    )
+
     tsb = token_slot_bytes(kind, cfg.n_kv_heads, cfg.head_dim, bcq_cfg)
     mean_live = np.mean([len(r.prompt) + r.max_new // 2 for r in reqs])
     contig_bytes = args.slots * max_len * tsb * cfg.n_layers
@@ -456,7 +506,7 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         "traces_warmup": traces_warmup,
         "traces_timed": {
             "paged": traces_paged, "chunked": traces_chunked,
-            "profile": eng_prof.trace_counts(),
+            "profile": traces_profile,
         },
         "prefill_launch_ms": 1e3 * tel_prof.h_prefill.mean(),
         "decode_tick_ms": 1e3 * tel_prof.h_decode.mean(),
@@ -521,6 +571,22 @@ def run_kind(cfg, kind: str, cb, args) -> dict:
         ),
         "fork_shared_pages": eng_fork.stats["shared_pages"],
         "fork_cow_copies": eng_fork.stats["cow_copies"],
+    })
+    row.update({
+        "host_tier_pages": host_pages,
+        "swap_preempt_exact": swap_preempt_exact,
+        "swap_preemptions": eng_swap.stats["preemptions"],
+        "swap_outs": sw["swap_outs"],
+        "swap_ins": sw["swap_ins"],
+        "swap_skips": sw["swap_skips"],
+        "swap_accounting_ok": (
+            sw["swap_ins"] == sw["verified_swapins"] + sw["corrupt_swapins"]
+            and sw["corrupt_swapins"] == 0
+        ),
+        "swap_pinned_after_drain": eng_swap.health()["host_tier"]["pinned"],
+        "swap_bytes_moved": sw["swap_bytes"],
+        "swap_recompute_tokens_avoided": swap_tokens_avoided,
+        "swap_recompute_flops_avoided": 2.0 * n_params * swap_tokens_avoided,
     })
     row.update(prefill_savings(cfg, skipped_per_req, kind, bcq_cfg))
     return row
@@ -611,6 +677,24 @@ def run_state_arch(arch: str, args) -> dict:
     # decode FLOPs ≈ 2·N_params per token (dense-GEMM approximation) —
     # the analytic cost of the recompute the checkpoint made unnecessary
     n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+    # host-tier pass: the same preemption with swap enabled — the LIVE
+    # state row snapshots to a pinned host page and resume restores it
+    # verified, so the replay column must read ZERO (vs ≤ page_size−1
+    # from the HBM checkpoint above, vs the full prefix recompute
+    # without checkpoints)
+    eng_h = mk_engine(host_pages=4)
+    rh = Request(rid=2, prompt=prompts[0], max_new=19)
+    eng_h.submit(rh)
+    for _ in range(9):
+        eng_h.step()
+    eng_h.drain()
+    host_full_recompute = plen + len(rh.out)
+    assert eng_h._preempt_one(None) is not None
+    eng_h.run_to_completion()
+    host_exact = list(map(int, rh.out)) == list(map(int, r0.out))
+    host_replay = eng_h._cs["replay_tokens"].value
+    swh = eng_h.health()["swap"]
     return {
         "arch": arch,
         "family": cfg.family,
@@ -628,6 +712,18 @@ def run_state_arch(arch: str, args) -> dict:
         "recompute_tokens_avoided": avoided,
         "recompute_flops_avoided": 2.0 * n_params * avoided,
         "pages_by_kind": eng.pool_mgr.used_by_kind(),
+        "host_preempt_exact": host_exact,
+        "host_replay_tokens": host_replay,
+        "host_swap_bytes": swh["swap_bytes"],
+        "host_swap_accounting_ok": (
+            swh["swap_outs"] == 1 and swh["swap_ins"] == 1
+            and swh["swap_ins"]
+            == swh["verified_swapins"] + swh["corrupt_swapins"]
+        ),
+        "host_recompute_tokens_avoided": host_full_recompute - host_replay,
+        "host_recompute_flops_avoided": (
+            2.0 * n_params * (host_full_recompute - host_replay)
+        ),
     }
 
 
@@ -703,6 +799,16 @@ def bench(args) -> bool:
             and r["guard_syncs_equal"]
             and r["guard_traces"] == 0
             and r["guard_audits_clean"]
+            # host-tier preemption: swap-enabled AND recompute-only
+            # engines both land the uninterrupted tokens bit-exactly,
+            # real swap traffic moved, every swap-in verified, no
+            # pinned carries survive the drain, and the swap path
+            # never runs MORE prefill than the recompute baseline
+            and r["swap_preempt_exact"]
+            and r["swap_outs"] > 0
+            and r["swap_accounting_ok"]
+            and r["swap_pinned_after_drain"] == 0
+            and r["swap_recompute_tokens_avoided"] >= 0
         )
         print(
             f"{r['kind']:6s} "
@@ -754,6 +860,15 @@ def bench(args) -> bool:
             f"({'zero attn FLOPs over cached pages' if zero_flops_over_hits else 'UNEXPECTED prefill tokens'})"
         )
         print(
+            f"{'':6s} host tier ({r['host_tier_pages']} host pages, "
+            f"{r['swap_preemptions']} preempts): exact="
+            f"{r['swap_preempt_exact']}, {r['swap_outs']} out/"
+            f"{r['swap_ins']} in ({r['swap_skips']} skips), "
+            f"{r['swap_bytes_moved']:,.0f} B moved vs "
+            f"{r['swap_recompute_tokens_avoided']} prefill tok = "
+            f"{r['swap_recompute_flops_avoided']/1e9:,.2f} GFLOPs avoided"
+        )
+        print(
             f"{'':6s} fork best-of-{r['fork_n']} "
             f"({r['fork_prompt_tokens']}-token prompt): "
             f"{r['fork_pages_per_sibling']:.2f} pages/sibling vs "
@@ -780,6 +895,10 @@ def bench(args) -> bool:
             # ...and strictly beats recomputing the whole prefix
             and r["recompute_tokens_avoided"] > 0
             and r["pages_by_kind"]["kv"] == 0
+            # host-tier resume: bit-exact with ZERO replayed tokens
+            and r["host_preempt_exact"]
+            and r["host_replay_tokens"] == 0
+            and r["host_swap_accounting_ok"]
         )
         print(
             f"{r['arch']:18s} "
@@ -793,6 +912,13 @@ def bench(args) -> bool:
         print(
             f"{'':18s} {r['state_checkpoints']} checkpoints "
             f"({r['ckpt_skips']} skipped), pages by kind {r['pages_by_kind']}"
+        )
+        print(
+            f"{'':18s} host-tier resume: exact={r['host_preempt_exact']}, "
+            f"{r['host_replay_tokens']} replayed (zero-replay), "
+            f"{r['host_swap_bytes']:,.0f} B moved vs "
+            f"{r['host_recompute_tokens_avoided']} tok = "
+            f"{r['host_recompute_flops_avoided']/1e9:,.2f} GFLOPs avoided"
         )
     report = {
         "config": {

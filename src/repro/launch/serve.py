@@ -58,6 +58,12 @@ seam (``--chaos-seed`` / ``--chaos-rate``), periodic invariant audits
 optional degraded mode (``--degrade-after``), then writes a containment
 report (``--chaos-report``) that ``tools/check_chaos.py`` validates:
 zero leaked pages, zero unhandled exceptions, clean final audit.
+``--host-tier`` (with ``--host-pages N``) adds the host-RAM swap tier to
+any paged or chaos run: evicted parked prefix pages and preemption
+snapshots demote to a bounded pinned host pool and stream back with
+blake2b-verified integrity (a corrupt swap-in quarantines only its
+owner); ``--recompress-after N`` arms the cold-page recompression ladder
+(bf16→int8→bcq4) under sustained allocator pressure.
 """
 from __future__ import annotations
 
@@ -146,10 +152,14 @@ def generate_contiguous(api, cfg, params, prompts, frames, gen_len: int,
 
 def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int,
                 chunked: bool = False, prefill_chunk: int = 0, telemetry=None,
-                pipeline_depth: int = 2, frames=None):
+                pipeline_depth: int = 2, frames=None, host_pages: int = 0,
+                recompress_after: int = 0):
     """Serve the prompt batch through the page-spec'd engine — PagedEngine
     for kv_paged families, StatePagedEngine for state_checkpoint families
-    (SSM / hybrid / enc-dec).  Returns (tokens, engine)."""
+    (SSM / hybrid / enc-dec).  ``host_pages > 0`` bounds a host-RAM swap
+    tier (evicted parked pages + preemption snapshots demote with
+    verified integrity); ``recompress_after > 0`` arms the cold-page
+    recompression ladder (kv layout only).  Returns (tokens, engine)."""
     spec = getattr(api, "page_spec", None)
     if spec is not None and spec.layout == "state_checkpoint":
         from repro.serving.state_engine import StatePagedEngine
@@ -159,6 +169,7 @@ def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int
             api, params, n_slots=prompts.shape[0], max_len=max_len,
             page_size=page_size, telemetry=telemetry,
             pipeline_depth=pipeline_depth,
+            host_pages=host_pages,
         )
     else:
         from repro.serving.engine import PagedEngine
@@ -169,6 +180,8 @@ def serve_paged(api, params, prompts, gen_len: int, max_len: int, page_size: int
             prefill_chunk=prefill_chunk or 2 * page_size,
             telemetry=telemetry,
             pipeline_depth=pipeline_depth,
+            host_pages=host_pages,
+            recompress_after=recompress_after,
         )
     for i in range(prompts.shape[0]):
         engine.submit(Request(rid=i, prompt=np.asarray(prompts[i]),
@@ -202,6 +215,7 @@ def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
         for s in SITES
     }
     faults = FaultInjector(seed=args.chaos_seed, rates=rates)
+    host_pages = args.host_pages if args.host_tier else 0
     if is_state:
         from repro.serving.state_engine import StatePagedEngine
 
@@ -213,6 +227,7 @@ def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
             max_queue=2 * batch,
             degrade_after=args.degrade_after,
             pipeline_depth=args.pipeline_depth,
+            host_pages=host_pages,
         )
     else:
         from repro.serving.engine import PagedEngine
@@ -226,6 +241,8 @@ def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
             max_queue=2 * batch,
             degrade_after=args.degrade_after,
             pipeline_depth=args.pipeline_depth,
+            host_pages=host_pages,
+            recompress_after=args.recompress_after,
         )
     # two waves: wave 2 queues behind wave 1, so admission, shedding and
     # preemption all see contention; odd rids fork into 2 siblings
@@ -264,6 +281,9 @@ def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
         "arch": args.arch,
         "cache": args.cache,
         "page_layout": getattr(engine, "PAGE_LAYOUT", "kv"),
+        "host_tier": bool(args.host_tier),
+        "host_pages": host_pages,
+        "recompress_after": args.recompress_after,
         "chaos_seed": args.chaos_seed,
         "chaos_rate": args.chaos_rate,
         "deadline_s": args.deadline_s,
@@ -285,14 +305,25 @@ def run_chaos(api, params, prompts, args, max_len: int, frames=None) -> dict:
     for o in outcomes:
         if o["error_kind"]:
             errs[o["error_kind"]] = errs.get(o["error_kind"], 0) + 1
+    sw = out["health"].get("swap", {})
     print(
         f"chaos  : seed={args.chaos_seed} rate={args.chaos_rate} "
-        f"cache={args.cache} — {len(outcomes)} finished over {ticks} ticks, "
+        f"cache={args.cache} host_tier={'on' if args.host_tier else 'off'} — "
+        f"{len(outcomes)} finished over {ticks} ticks, "
         f"{out['faults']['total']} faults injected {out['faults']['by_site']}, "
         f"errors {errs or '{}'}; leaked pages {leaked}, "
         f"audit {'clean' if report.ok else 'DIRTY'}, "
         f"unhandled {unhandled or 'none'}"
     )
+    if args.host_tier:
+        print(
+            f"chaos  : swap outs={sw.get('swap_outs', 0)} "
+            f"ins={sw.get('swap_ins', 0)} "
+            f"(verified {sw.get('verified_swapins', 0)} / corrupt "
+            f"{sw.get('corrupt_swapins', 0)}), skips={sw.get('swap_skips', 0)}, "
+            f"bytes={sw.get('swap_bytes', 0)}, "
+            f"recompressed={sw.get('recompressed_pages', 0)}"
+        )
     if args.chaos_report:
         with open(args.chaos_report, "w") as f:
             json.dump(out, f, indent=1)
@@ -382,6 +413,18 @@ def main():
                     help="enter degraded mode (reject forks, shrink the "
                          "prefix LRU) after N consecutive ticks at the "
                          "admission watermark (default: off)")
+    ap.add_argument("--host-tier", action="store_true",
+                    help="enable the host-RAM swap tier: evicted parked "
+                         "prefix pages and preemption snapshots demote to "
+                         "a bounded pinned host pool (blake2b-verified "
+                         "swap-ins; docs/ROBUSTNESS.md) instead of being "
+                         "recomputed")
+    ap.add_argument("--host-pages", type=int, default=256,
+                    help="host-tier capacity in pages (with --host-tier)")
+    ap.add_argument("--recompress-after", type=int, default=0,
+                    help="recompress cold HBM pages (bf16->int8->bcq4) "
+                         "after N consecutive ticks at/below the admission "
+                         "watermark (kv layout; 0 = off)")
     args = ap.parse_args()
     if args.metrics_json or args.trace_out or args.quant_probes:
         args.paged = True
@@ -484,6 +527,7 @@ def main():
         got_paged, engine = serve_paged(
             api_q, params_q, prompts, args.gen, max_len, args.page_size,
             pipeline_depth=args.pipeline_depth, frames=frames,
+            host_pages=args.host_pages if args.host_tier else 0,
         )
         t_p = time.time() - t0
         agree_p = float(jnp.mean((got_paged == got).astype(jnp.float32)))
@@ -513,6 +557,8 @@ def main():
         got_paged, engine = serve_paged(
             api_q, params_q, prompts, args.gen, max_len, args.page_size,
             pipeline_depth=args.pipeline_depth,
+            host_pages=args.host_pages if args.host_tier else 0,
+            recompress_after=args.recompress_after,
         )
         t_p = time.time() - t0
         out_c = {r.rid: r.out for r in fin_c}

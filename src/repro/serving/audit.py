@@ -23,7 +23,14 @@ whole serving design rests on:
   registered refcount-0 pages are parked (evictable), no free page
   stays registered;
 * **slot geometry** — a slot's live pages form a contiguous row prefix
-  exactly covering its position (±1 for a freshly ensured tail page).
+  exactly covering its position (±1 for a freshly ensured tail page);
+* **cross-tier partition** (host tier enabled) — every page lives in
+  exactly one tier: a chain hash resolves to an HBM pid OR a host
+  handle, never both; every host entry carries an integrity digest;
+  pinned entries are preemption carries referenced by exactly one
+  queued request, unpinned entries are prefix-registered (an entry with
+  neither anchor is a host-tier leak); host handles never collide with
+  HBM pids (handle base offset).
 
 Report mode collects every violation into an :class:`AuditReport`;
 fail-fast mode (``engine.audit(strict=True)`` or ``Engine(strict=True)``)
@@ -35,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.serving.pages import NULL_PAGE, pages_needed
+from repro.serving.pages import _HANDLE_BASE, NULL_PAGE, pages_needed
 
 
 class AuditError(RuntimeError):
@@ -205,7 +212,7 @@ def audit_engine(engine) -> AuditReport:
             bad.append(f"page {pid} refcount {rc} < 0")
         if rc != refs:
             bad.append(
-                f"page {pid} refcount {rc} != {refs} engine references"
+                f"page {pid} refcount {rc} != {refs} block-table references"
             )
         is_free = pid in free_set
         is_parked = pid in parked
@@ -241,6 +248,101 @@ def audit_engine(engine) -> AuditReport:
     for pid in parked:
         if pid not in prefix.hash_of:
             bad.append(f"parked page {pid} has no prefix registration")
+
+    # ---- host tier (cross-tier partition) -------------------------------
+    tier = getattr(engine, "host_tier", None)
+    if tier is None:
+        if prefix.host_by_hash or prefix.hash_of_handle:
+            bad.append(
+                f"host tier disabled but {len(prefix.host_by_hash)} prefix "
+                "hashes resolve to host handles"
+            )
+    else:
+        if tier.used() > tier.capacity:
+            bad.append(
+                f"host tier over capacity: {tier.used()} > {tier.capacity}"
+            )
+        nbytes = sum(e.nbytes for e in tier.entries.values())
+        if nbytes != tier.bytes_resident:
+            bad.append(
+                f"host tier bytes_resident {tier.bytes_resident} != {nbytes} "
+                "summed entry bytes"
+            )
+        # preemption carries held by queued requests: each pinned entry is
+        # anchored by exactly ONE request, and never doubles as a prefix
+        # chunk (one owner per entry, one tier per page)
+        carried: dict[int, int] = {}
+        for req in engine.queue:
+            hr = getattr(req, "_host_resume", None)
+            for h in (hr[0] if hr is not None else ()):
+                carried[h] = carried.get(h, 0) + 1
+            hsr = getattr(req, "_host_state_resume", None)
+            if hsr is not None:
+                carried[hsr[0]] = carried.get(hsr[0], 0) + 1
+        for handle, n in carried.items():
+            if n != 1:
+                bad.append(f"host handle {handle} carried by {n} requests")
+            e = tier.entries.get(handle)
+            if e is None:
+                bad.append(
+                    f"queued request carries dangling host handle {handle}"
+                )
+            elif not e.pinned:
+                bad.append(f"carried host handle {handle} is not pinned")
+            if handle in prefix.hash_of_handle:
+                bad.append(
+                    f"host handle {handle} is both a preemption carry and a "
+                    "registered prefix chunk"
+                )
+        # prefix host registration: a bijection onto unpinned entries, with
+        # every hash resolving in exactly one tier
+        if len(prefix.host_by_hash) != len(prefix.hash_of_handle):
+            bad.append(
+                "host prefix registration not a bijection: "
+                f"{len(prefix.host_by_hash)} hashes vs "
+                f"{len(prefix.hash_of_handle)} handles"
+            )
+        for h, handle in prefix.host_by_hash.items():
+            if prefix.hash_of_handle.get(handle) != h:
+                bad.append(f"host prefix maps disagree on handle {handle}")
+            if not tier.has(handle):
+                bad.append(
+                    f"prefix hash registered on dangling host handle {handle}"
+                )
+            if h in prefix.by_hash:
+                bad.append(
+                    f"hash resolves to BOTH HBM page {prefix.by_hash[h]} and "
+                    f"host handle {handle} (one tier per page)"
+                )
+        for handle, e in tier.entries.items():
+            if handle <= _HANDLE_BASE:
+                bad.append(
+                    f"host handle {handle} at/below the handle base "
+                    "(collides with HBM page ids)"
+                )
+            if len(e.digest) != 16:
+                bad.append(f"host handle {handle} has no integrity digest")
+            want = getattr(engine, "HOST_SWAP_KIND", None)
+            if want is not None and e.kind != want:
+                bad.append(
+                    f"host handle {handle} holds a {e.kind!r} page but this "
+                    f"layout swaps {want!r}"
+                )
+            if e.pinned:
+                if carried.get(handle, 0) == 0:
+                    bad.append(
+                        f"pinned host handle {handle} carried by no queued "
+                        "request (host-tier leak)"
+                    )
+            elif handle not in prefix.hash_of_handle:
+                bad.append(
+                    f"unpinned host handle {handle} has no prefix "
+                    "registration (unreachable host entry)"
+                )
+    # recompression stage markers track live/parked pages only
+    for pid in getattr(engine, "_recompress_stage", {}):
+        if pid in free_set:
+            bad.append(f"free page {pid} still has a recompress stage marker")
 
     return AuditReport(
         ok=not bad,

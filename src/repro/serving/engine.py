@@ -173,6 +173,7 @@ from repro.serving.prefix import PrefixCache, chunk_hashes
 from repro.serving.telemetry import (
     ENGINE_STAT_KEYS,
     ROBUSTNESS_STAT_KEYS,
+    SWAP_STAT_KEYS,
     StatsView,
     Telemetry,
 )
@@ -339,6 +340,8 @@ class PagedEngine:
         degrade_after: Optional[int] = None,
         recover_after: int = 16,
         degraded_prefix_target: int = 0,
+        host_pages: int = 0,
+        recompress_after: int = 0,
     ):
         if api.paged_decode_fn is None:
             # typed and actionable instead of an assert: names the family
@@ -356,8 +359,9 @@ class PagedEngine:
             api, params, n_slots, max_len, page_size, eos_id, prefix_caching,
             profile_sync, pipeline_depth, telemetry, fault_injector, strict,
             nan_guard, audit_every, max_queue, shed_stuck, degrade_after,
-            recover_after, degraded_prefix_target,
+            recover_after, degraded_prefix_target, host_pages,
         )
+        self.recompress_after = recompress_after
         self.chunked = chunked_prefill
         self.prefill_chunk = prefill_chunk
         self.maxp = max_len // page_size
@@ -413,6 +417,7 @@ class PagedEngine:
         prefix_caching, profile_sync, pipeline_depth, telemetry,
         fault_injector, strict, nan_guard, audit_every, max_queue,
         shed_stuck, degrade_after, recover_after, degraded_prefix_target,
+        host_pages=0,
     ):
         """Layout-independent engine state: the request lifecycle (queue /
         finished / lifecycle guard anchors), telemetry counters, fault
@@ -508,6 +513,24 @@ class PagedEngine:
         self._relief_ticks = 0
         self._last_audit: Optional[AuditReport] = None
         self._cr = {k: _reg.counter(k) for k in ROBUSTNESS_STAT_KEYS}
+        # --- host swap tier (docs/ROBUSTNESS.md "Memory tiers") ---
+        # host_pages > 0 bounds a pinned host-RAM pool: evicted parked
+        # prefix pages and preemption victims' pages DMA out with a
+        # per-page blake2b digest and stream back verified on demand —
+        # eviction becomes a recoverable bytes-move instead of data loss.
+        # Counters are registry-only like the robustness set (the legacy
+        # stats Mapping is pinned) and always registered so the metric
+        # catalogue is configuration-independent.
+        self.host_tier = (
+            pages_lib.HostPageTier(host_pages) if host_pages else None
+        )
+        self._cs_swap = {k: _reg.counter(k) for k in SWAP_STAT_KEYS}
+        self._cs_swap["swap_bytes"].unit = "bytes"
+        # opt-in cold-page recompression ladder (KV layout only;
+        # PagedEngine.__init__ overwrites recompress_after from its kwarg)
+        self.recompress_after = 0
+        self._rc_pressure = 0
+        self._recompress_stage: dict[int, int] = {}
         # --- pipelined tick state (see pipeline_depth above) ---
         # _inflight: enqueued-but-unsynced decode launches (≤ depth-1).
         # _chain_tok: the LAST launch's on-device merged token choice —
@@ -683,6 +706,7 @@ class PagedEngine:
         prefix LRU is shrunk toward ``degraded_prefix_target`` parked
         pages (cached-prefix memory goes back to the live set) and
         forking submissions are rejected (see submit)."""
+        self._recompress_tick()
         if self.degrade_after is None:
             return
         pressured = self._available_pages() <= self.watermark
@@ -701,12 +725,43 @@ class PagedEngine:
         if self.degraded:
             self._cr["degraded_ticks"].inc()
             while self.prefix.reclaimable_count() > self.degraded_prefix_target:
-                victim = self.prefix.evict_one()
-                if victim is None:
+                if self._evict_parked_page() is None:
                     break
-                self._c["prefix_evictions"].inc()
-                self.telemetry.instant("prefix_evict", page=int(victim))
-                self.pool_mgr.release(victim)
+
+    def _recompress_tick(self, budget: int = 2):
+        """Opt-in accuracy-vs-bits ladder (``recompress_after`` > 0):
+        after that many consecutive ticks at/below the admission
+        watermark, walk the prefix LRU from its cold tail and requantize
+        up to ``budget`` parked pages one ladder stage down
+        (native→int8→bcq4, ``pages.kv_page_recompress``) in place —
+        trading parked-page fidelity for effective capacity before
+        resorting to eviction.  The stage marker sticks to the page's
+        contents: it survives revival (downstream equivalence becomes
+        tolerance-tier) and travels through the host tier as entry meta;
+        swap itself stays bitwise."""
+        if not self.recompress_after:
+            return
+        if self._available_pages() > self.watermark:
+            self._rc_pressure = 0
+            return
+        self._rc_pressure += 1
+        if self._rc_pressure < self.recompress_after:
+            return
+        top = len(pages_lib.RECOMPRESS_STAGES) - 1
+        for pid in list(self.prefix.reclaimable):  # LRU order: coldest first
+            if budget == 0:
+                break
+            stage = self._recompress_stage.get(pid, 0)
+            if stage >= top:
+                continue
+            self._recompress_page(pid, pages_lib.RECOMPRESS_STAGES[stage + 1])
+            self._recompress_stage[pid] = stage + 1
+            self._cs_swap["recompressed_pages"].inc()
+            self.telemetry.instant(
+                "recompress", page=int(pid),
+                stage=pages_lib.RECOMPRESS_STAGES[stage + 1],
+            )
+            budget -= 1
 
     def audit(self, strict: Optional[bool] = None) -> AuditReport:
         """Run the serving/audit.py invariant sweep now.  Report mode by
@@ -739,6 +794,10 @@ class PagedEngine:
             "pressure_ticks": self._pressure_ticks,
             "relief_ticks": self._relief_ticks,
             "counters": {k: c.value for k, c in self._cr.items()},
+            "host_tier": (
+                None if self.host_tier is None else self.host_tier.snapshot()
+            ),
+            "swap": {k: c.value for k, c in self._cs_swap.items()},
             "last_audit": (
                 None if self._last_audit is None else self._last_audit.to_dict()
             ),
@@ -765,27 +824,136 @@ class PagedEngine:
             return None  # injected transient exhaustion (chaos testing)
         pid = self.pool_mgr.alloc(kind)
         while pid is None:
-            victim = self.prefix.evict_one()
-            if victim is None:
+            if self._evict_parked_page() is None:
                 return None
-            self._c["prefix_evictions"].inc()
-            self.telemetry.instant("prefix_evict", page=int(victim))
-            self.pool_mgr.release(victim)
             pid = self.pool_mgr.alloc(kind)
         # (peak tracking lives in PagePool.alloc — see pages.PagePool.peak)
         return pid
 
+    def _evict_parked_page(self) -> Optional[int]:
+        """Evict the LRU parked prefix page back to the free list.  With
+        the host tier enabled its bytes are demoted to host RAM first
+        (the chain hash re-homes onto the host handle), so a future hit
+        streams the page back instead of recomputing; without the tier —
+        or when the demotion is refused — this is the legacy lossy
+        eviction."""
+        popped = self.prefix.pop_lru()
+        if popped is None:
+            return None
+        h, victim = popped
+        self._c["prefix_evictions"].inc()
+        self.telemetry.instant("prefix_evict", page=int(victim))
+        self._maybe_swap_out_parked(h, victim)
+        self._recompress_stage.pop(victim, None)  # pid returns to free list
+        self.pool_mgr.release(victim)
+        return victim
+
+    def _maybe_swap_out_parked(self, h, pid: int) -> bool:
+        """Demote an evicted parked page's bytes to the host tier under
+        its chain hash.  Refusals (tier off, unswappable kind, injected
+        swap_out fault, tier full of pinned entries) fall back to plain
+        eviction — the caller releases the pid either way."""
+        tier = self.host_tier
+        if tier is None or h is None:
+            return False
+        kind = self.pool_mgr.kind_of(pid)
+        if kind != self.HOST_SWAP_KIND:
+            return False  # e.g. shared_ro encoder pages stay re-encodable
+        if self.faults is not None and self.faults.swap_out_fails(
+            self._tick, key=int(pid)
+        ):
+            self._cs_swap["swap_skips"].inc()
+            return False
+        if tier.full():
+            ev = tier.evict_lru()
+            if ev is None:
+                self._cs_swap["swap_skips"].inc()
+                return False  # every host entry pinned: plain eviction
+            self.prefix.host_forget(ev[0])
+            self.telemetry.instant("host_evict")
+        arrays = self._fetch_page_arrays(pid)
+        stage = self._recompress_stage.get(pid, 0)
+        handle = tier.put(
+            arrays, kind, meta=({"stage": stage} if stage else None)
+        )
+        self.prefix.host_register(h, handle)
+        self._cs_swap["swap_outs"].inc()
+        self._cs_swap["swap_bytes"].inc(sum(a.nbytes for a in arrays))
+        self.telemetry.instant("swap_out", page=int(pid))
+        return True
+
     # ---------------------------------------------- layout-subclass hooks
+    # page kind the host tier accepts from this layout (parked-prefix
+    # swap-outs of any other kind fall back to plain eviction)
+    HOST_SWAP_KIND = pages_lib.KIND_KV
+
+    def _fetch_page_arrays(self, pid: int) -> list:
+        """One page's per-page pool slices as host arrays (swap-out)."""
+        return pages_lib.kv_page_fetch(self.pool, pid)
+
+    def _insert_page_arrays(self, pid: int, arrays) -> None:
+        """Write verified host arrays back into pool page ``pid``."""
+        self.pool = pages_lib.kv_page_insert(self.pool, arrays, pid)
+
+    def _recompress_page(self, pid: int, stage: str) -> None:
+        self.pool = pages_lib.kv_page_recompress(self.pool, pid, stage)
+
     def _carry_resume_state(self, slot, resumed: Request) -> None:
-        """Preemption hook: move page refs the resumed request should keep
-        across the queue round-trip.  The KV layout carries nothing — its
-        preemption is pure recompute (prefix hits soften the replay); the
-        state-checkpoint layout overrides this to hand over the checkpoint
-        and shared-encoder pages."""
+        """Preemption hook: move what the resumed request needs across the
+        queue round-trip.  Without a host tier the KV layout carries
+        nothing — preemption is pure recompute (prefix hits soften the
+        replay).  With the tier, a decoding victim's written pages are
+        snapshotted to pinned host entries (per-page digests) and the
+        resumed request carries their handles: re-admission streams the
+        pages back verified and rejoins decode directly — zero prefill
+        FLOPs.  Any refusal (tier full of pinned entries, injected
+        swap_out fault, mid-prefill victim) keeps the legacy recompute
+        path.  The state-checkpoint layout overrides this wholesale."""
+        tier = self.host_tier
+        if (
+            tier is None or slot.mode != "decode" or slot.pos <= 0
+            or resumed.n_samples > 1
+        ):
+            return
+        i = self.slots.index(slot)
+        pids = live_pages(self.tables[i])
+        if not pids:
+            return
+        if self.faults is not None and self.faults.swap_out_fails(
+            self._tick, key=int(resumed.rid)
+        ):
+            self._cs_swap["swap_skips"].inc()
+            return
+        while tier.capacity - tier.used() < len(pids):
+            ev = tier.evict_lru()
+            if ev is None:
+                self._cs_swap["swap_skips"].inc()
+                return  # cannot fit the carry: recompute preemption
+            self.prefix.host_forget(ev[0])
+        handles, nbytes = [], 0
+        for pid in pids:
+            arrays = self._fetch_page_arrays(int(pid))
+            handles.append(tier.put(
+                arrays, self.HOST_SWAP_KIND, pinned=True,
+                meta={"rid": int(resumed.rid)},
+            ))
+            nbytes += sum(a.nbytes for a in arrays)
+        resumed._host_resume = (handles, slot.pos)
+        self._cs_swap["swap_outs"].inc(len(pids))
+        self._cs_swap["swap_bytes"].inc(nbytes)
+        self.telemetry.instant(
+            "swap_out_preempt", rid=int(resumed.rid), pages=len(pids)
+        )
 
     def _release_carried(self, req: Request) -> None:
-        """Teardown hook: drop page refs a QUEUED request carries (only a
-        preempted-and-resumed state-layout request holds any)."""
+        """Teardown hook: drop what a QUEUED request carries (host-tier
+        page snapshots here; the state layout adds HBM checkpoint refs)."""
+        hr = getattr(req, "_host_resume", None)
+        if hr is not None:
+            if self.host_tier is not None:
+                for handle in hr[0]:
+                    self.host_tier.drop(handle)
+            req._host_resume = None
 
     def _drop_page(self, pid: int):
         if pid == NULL_PAGE:
@@ -850,20 +1018,41 @@ class PagedEngine:
         else:
             hashes = chunk_hashes(prompt, self.ps)
             req._hash_cache = (self.ps, hashes)
-        hits: list[int] = []
+        hits: list = []
         for h in hashes:
             pid = self.prefix.peek(h)
-            if pid is None:
-                break
-            hits.append(pid)
+            if pid is not None:
+                hits.append(pid)
+                continue
+            if self.host_tier is not None:
+                handle = self.prefix.host_peek(h)
+                if handle is not None:
+                    # host-resident chunk: still a hit — claiming it
+                    # streams the page back into a FRESH HBM pid
+                    hits.append(("host", handle))
+                    continue
+            break
         if hits and self.faults is not None and self.faults.drop_prefix_claim(
             self._tick, key=int(req.rid)
         ):
             hits = []  # injected racing eviction: force the recompute path
         return hashes, hits
 
-    def _claim_hits(self, hashes, hits, n_cacheable: int, table: np.ndarray):
-        """Commit to the planned hit pages: revive/ref them, count stats.
+    @staticmethod
+    def _n_hbm_hits(hits) -> int:
+        """Planned hits already holding an HBM pid (host hits need a
+        fresh page each, so they don't reduce the allocation need)."""
+        return sum(1 for hit in hits if not isinstance(hit, tuple))
+
+    def _claim_hits(self, hashes, hits, n_cacheable: int,
+                    table: np.ndarray) -> int:
+        """Commit to the planned hit pages: revive/ref HBM hits, stream
+        host hits back in (verified swap-in into a fresh pid).  Returns
+        the number of pages actually claimed — a refused host swap-in
+        (injected ``swap_in`` fault, tier race, dry allocator) TRUNCATES
+        the chain there and the rest of the prompt recomputes; a corrupt
+        swap-in raises ``PageCorruptionError`` (the owning request is
+        quarantined by ``_admit``, never retried).
 
         ``n_cacheable`` is the count of prompt pages that COULD have hit:
         full pages only (a prompt's trailing partial page is never
@@ -872,18 +1061,181 @@ class PagedEngine:
         produce the prompt's last-position logits).  Counting misses over
         all prompt pages instead used to report a 50% hit rate for a
         100%-warm resubmission of a 17-token prompt at page_size=16."""
-        self._c["prefix_hits"].inc(len(hits))
-        self._c["prefix_misses"].inc(max(0, n_cacheable - len(hits)))
-        for i, (h, pid) in enumerate(zip(hashes, hits)):
-            claimed = self.prefix.lookup(h)  # unparks the reclaimable page
-            assert claimed == pid
-            if self.pool_mgr.refcount[pid] == 0:
-                self.pool_mgr.revive(pid)
+        claimed = 0
+        for i, (h, hit) in enumerate(zip(hashes, hits)):
+            if isinstance(hit, tuple):
+                pid = self._swap_in_prefix_page(h)
+                if pid is None:
+                    break  # refused: the rest of the chain recomputes
             else:
-                self.pool_mgr.ref(pid)
+                pid = hit
+                got = self.prefix.lookup(h)  # unparks the reclaimable page
+                assert got == pid
+                if self.pool_mgr.refcount[pid] == 0:
+                    self.pool_mgr.revive(pid)
+                else:
+                    self.pool_mgr.ref(pid)
             table[i] = pid
+            claimed += 1
+        self._c["prefix_hits"].inc(claimed)
+        self._c["prefix_misses"].inc(max(0, n_cacheable - claimed))
+        return claimed
+
+    def _swap_in_prefix_page(self, h) -> Optional[int]:
+        """Stream one host-resident prefix chunk back into a fresh HBM
+        page: claim the handle, allocate, verify-take, insert, re-register
+        the hash on the new pid.  Returns the pid, None on a refusal
+        (treated as a miss), or raises ``PageCorruptionError`` when the
+        integrity check fails (the entry is gone either way — the hash is
+        simply no longer cached)."""
+        tier = self.host_tier
+        handle = self.prefix.host_peek(h)
+        if tier is None or handle is None or not tier.has(handle):
+            return None  # raced out since planning
+        key = int(handle - pages_lib._HANDLE_BASE)
+        if self.faults is not None and self.faults.swap_in_fails(
+            self._tick, key=key
+        ):
+            # injected host-pool teardown: the entry is unusable
+            self.prefix.host_forget(handle)
+            tier.drop(handle)
+            self._cs_swap["swap_skips"].inc()
+            return None
+        self.prefix.host_claim(h)
+        tier.pin(handle)  # the alloc below may LRU-evict host entries
+        pid = self._alloc_page(self.HOST_SWAP_KIND)
+        if pid is None:
+            tier.pin(handle, False)
+            self.prefix.host_register(h, handle)  # undo the claim
+            return None
+        if self.faults is not None and self.faults.swap_corrupts(
+            self._tick, key=key
+        ):
+            tier.corrupt(handle)
+        self._cs_swap["swap_ins"].inc()
+        try:
+            entry = tier.take(handle, expect_kind=self.HOST_SWAP_KIND)
+        except pages_lib.PageCorruptionError:
+            self._cs_swap["corrupt_swapins"].inc()
+            self.telemetry.instant("swap_corrupt", handle=key)
+            self._drop_page(pid)  # fresh pid, not yet registered
+            raise
+        self._cs_swap["verified_swapins"].inc()
+        self._cs_swap["swap_bytes"].inc(entry.nbytes)
+        self._insert_page_arrays(pid, entry.arrays)
+        stage = entry.meta.get("stage", 0)
+        if stage:
+            self._recompress_stage[pid] = stage
+        if self.prefix_caching:
+            self.prefix.register(h, pid)
+        self.telemetry.instant("swap_in", page=int(pid))
+        return pid
+
+    def _try_resume_from_host(self, req: Request, slot_idx: int,
+                              hr: tuple) -> Optional[bool]:
+        """Re-admit a preemption victim from its carried host-tier page
+        snapshots: stream every page back into fresh pids (verified), then
+        rejoin decode at the carried position — zero prefill FLOPs and
+        bit-identical KV.  Returns True (admitted), False (blocked on
+        pages; handles stay pinned for the next attempt), or None (fell
+        back — handles dropped, caller runs recompute admission)."""
+        handles, pos = hr
+        tier = self.host_tier
+
+        def _fallback() -> None:
+            self._release_carried(req)
+
+        if (
+            tier is None
+            or any(not tier.has(h) for h in handles)
+            # non-chunked recompute would raise the typed too-long error;
+            # resuming here would mask that contract
+            or (not self.chunked and len(req.prompt) >= self.max_len)
+        ):
+            _fallback()
+            return None
+        if self.faults is not None and self.faults.swap_in_fails(
+            self._tick, key=int(req.rid)
+        ):
+            self._cs_swap["swap_skips"].inc()
+            _fallback()
+            return None
+        need = len(handles)
+        if self._available_pages() < need + self.watermark:
+            return False  # blocked: pinned handles survive for a retry
+        if self.chunked:
+            self._grow_tables(
+                pages_needed(len(req.prompt) + req.max_new + 1, self.ps)
+            )
+        # allocate every destination page BEFORE consuming any host entry:
+        # the watermark check above already held, so a None here is an
+        # allocation flake (injected or racing) — roll back and fall all
+        # the way back to recompute admission (plan-only in chunked mode,
+        # so it cannot itself wedge the stuck-shed heuristic); nothing
+        # was consumed, so recompute stays exact
+        table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
+        for k in range(need):
+            pid = self._alloc_page(self.HOST_SWAP_KIND)
+            if pid is None:
+                for p in table:
+                    self._drop_page(int(p))
+                self._cs_swap["swap_skips"].inc()
+                _fallback()
+                return None
+            table[k] = pid
+        try:
+            for k, handle in enumerate(handles):
+                if self.faults is not None and self.faults.swap_corrupts(
+                    self._tick, key=int(req.rid)
+                ):
+                    tier.corrupt(handle)
+                self._cs_swap["swap_ins"].inc()
+                entry = tier.take(handle, expect_kind=self.HOST_SWAP_KIND)
+                self._cs_swap["verified_swapins"].inc()
+                self._cs_swap["swap_bytes"].inc(entry.nbytes)
+                self._insert_page_arrays(int(table[k]), entry.arrays)
+        except pages_lib.PageCorruptionError:
+            for pid in table:
+                self._drop_page(int(pid))
+            self._cs_swap["corrupt_swapins"].inc()
+            self.telemetry.instant("swap_corrupt", rid=int(req.rid))
+            # taken handles are gone from the tier; drop the untaken
+            # remainder (corruption aborted the loop mid-way) — the raise
+            # quarantines this request, nothing else references them
+            self._release_carried(req)
+            raise
+        req._host_resume = None
+        self.telemetry.on_admit(req, time.perf_counter())
+        self.tables[slot_idx] = table
+        self.slots[slot_idx] = _PagedSlot(
+            req=req, pos=pos, admit_seq=self._admit_counter
+        )
+        self._admit_counter += 1
+        # rejoin decode exactly where preemption cut it: the cache holds
+        # pos tokens and the one token it does NOT yet contain is the last
+        # of the resumed prompt (prompt+out concatenation — decode always
+        # keeps the cache one token behind the next write), so seed the
+        # decode loop with it just like _start_decode would.
+        assert pos == len(req.prompt) - 1, (
+            "host resume carried a position that disagrees with the "
+            "requeued prompt (expected pos == len(prompt) - 1)"
+        )
+        self._next_tok[slot_idx] = int(np.asarray(req.prompt)[-1])
+        self._chained[slot_idx] = False
+        req._progress_tick = self._tick
+        self.telemetry.instant(
+            "swap_resume", rid=int(req.rid), pages=need, pos=int(pos)
+        )
+        self._finish_if_budget_spent(slot_idx)
+        return True
 
     def _try_admit(self, req: Request, slot_idx: int) -> bool:
+        hr = getattr(req, "_host_resume", None)
+        if hr is not None:
+            res = self._try_resume_from_host(req, slot_idx, hr)
+            if res is not None:
+                return res
+            # fell back (handles dropped): ordinary recompute admission
         prompt = np.asarray(req.prompt, np.int64)
         plen = len(prompt)
         if self.chunked:
@@ -894,15 +1246,17 @@ class PagedEngine:
         n_full = plen // self.ps
 
         hashes, hits = self._plan_prefix_hits(req, prompt)
-        need = n_prompt_pages - len(hits)
+        # host hits stream back into FRESH pids, so they don't reduce the
+        # allocation need — only already-HBM-resident hits do
+        need = n_prompt_pages - self._n_hbm_hits(hits)
         if self._available_pages() < need + self.watermark:
             return False  # admission control: keep decode headroom
 
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
         scatter_ids = np.full((self.maxp,), NULL_PAGE, np.int32)
         try:
-            self._claim_hits(hashes, hits, n_full, table)
-            for i in range(len(hits), n_prompt_pages):
+            n_claimed = self._claim_hits(hashes, hits, n_full, table)
+            for i in range(n_claimed, n_prompt_pages):
                 pid = self._alloc_page()
                 if pid is None:
                     raise PagePoolExhaustedError(
@@ -931,7 +1285,7 @@ class PagedEngine:
             self.telemetry.on_chunk(req, t0, t1, plen)  # whole prompt, 1 chunk
             self.pool = self._scatter(self.pool, cache1, jnp.asarray(scatter_ids))
             if self.prefix_caching:
-                for i in range(len(hits), n_full):
+                for i in range(n_claimed, n_full):
                     self.prefix.register(hashes[i], int(table[i]))
             self._c["prefill_tokens"].inc(plen)
         except BaseException:
@@ -965,20 +1319,28 @@ class PagedEngine:
         # keep ≥ 1 suffix token so the prompt's last-position logits (the
         # first generated token) come out of the final chunk
         hits = hits[: min(len(hits), (plen - 1) // self.ps)]
-        need = n_prompt_pages - len(hits)
+        need = n_prompt_pages - self._n_hbm_hits(hits)
         if self._available_pages() < need + self.watermark:
             return False  # same memory policy; only compute is deferred
 
         self._grow_tables(pages_needed(plen + req.max_new + 1, self.ps))
         table = np.full((self.tables.shape[1],), NULL_PAGE, np.int32)
-        # cacheable = full pages minus the hit deliberately trimmed above
-        self._claim_hits(hashes, hits, (plen - 1) // self.ps, table)
-        self._c["prefill_tokens_skipped"].inc(len(hits) * self.ps)
+        try:
+            # cacheable = full pages minus the hit deliberately trimmed above
+            n_claimed = self._claim_hits(hashes, hits, (plen - 1) // self.ps,
+                                         table)
+        except BaseException:
+            # a corrupt host swap-in mid-claim: free what was claimed so
+            # far (the pages live only in the local ``table`` here)
+            for pid in table:
+                self._drop_page(int(pid))
+            raise
+        self._c["prefill_tokens_skipped"].inc(n_claimed * self.ps)
         self.telemetry.on_admit(req, time.perf_counter())
 
         self.tables[slot_idx] = table
         self.slots[slot_idx] = _PagedSlot(
-            req=req, pos=len(hits) * self.ps, admit_seq=self._admit_counter,
+            req=req, pos=n_claimed * self.ps, admit_seq=self._admit_counter,
             mode="prefill", pending=prompt, hashes=hashes,
         )
         self._admit_counter += 1
@@ -1034,6 +1396,15 @@ class PagedEngine:
                 # claims back; retry a transient failure a few times from
                 # the head, then fail the REQUEST instead of the loop.
                 self.queue.popleft()
+                if isinstance(exc, pages_lib.PageCorruptionError):
+                    # NO retry: a retry would succeed via recompute and
+                    # mask the integrity failure — quarantine the owner
+                    # (only this request ever referenced the bad bytes)
+                    self._finish_error(
+                        req, "quarantined",
+                        f"swap-in integrity failure: {exc}",
+                    )
+                    break
                 req._admit_retries += 1
                 if req._admit_retries <= 3:
                     self.queue.appendleft(req)
@@ -1191,10 +1562,19 @@ class PagedEngine:
         # only its refs (_free_slot): n_samples is already 1 post-fork, so
         # it never re-forks; a parent preempted BEFORE forking keeps
         # n_samples and forks after its re-prefill.
+        # only the output suffix NOT yet folded into the prompt by an
+        # earlier preemption is appended — a twice-preempted request must
+        # not double-count the tokens its first requeue already folded in
+        orig_plen = req._orig_plen if req._orig_plen is not None else len(req.prompt)
+        folded = len(req.prompt) - orig_plen
         resumed = Request(
             rid=req.rid,
-            prompt=np.concatenate([np.asarray(req.prompt, np.int64), np.asarray(req.out, np.int64)]),
+            prompt=np.concatenate([
+                np.asarray(req.prompt, np.int64),
+                np.asarray(req.out[folded:], np.int64),
+            ]),
             max_new=req.max_new,
+            _orig_plen=orig_plen,
             out=req.out,
             frames=req.frames,
             sampling=req.sampling,
@@ -1643,9 +2023,18 @@ class PagedEngine:
         fail-stop PagePoolExhaustedError for capacity-planning tests."""
         ticks = 0
         stuck = 0
+        n_faults = len(self.faults.log) if self.faults is not None else 0
         while (self.queue or self._active()) and ticks < max_ticks:
             served = self.step()
             ticks += 1
+            if self.faults is not None and len(self.faults.log) > n_faults:
+                # injected faults fired this tick: a served==0 tick is
+                # attributable to chaos (a flake preempting the only
+                # active slot, a refused swap resume), not to a genuinely
+                # unservable head-of-line request — don't count it
+                n_faults = len(self.faults.log)
+                stuck = 0
+                continue
             if served == 0 and self.queue and not self._active():
                 head = self.queue[0]
                 msg = (

@@ -27,7 +27,19 @@ Sites (the engine's seams, see ``PagedEngine``):
                        W4A4 forward pass), which the engine's NaN guard
                        must quarantine;
 * ``"sampler"``      — ``pick_token`` for one slot raises
-                       ``InjectedFault`` (a poisoned sampler state).
+                       ``InjectedFault`` (a poisoned sampler state);
+* ``"swap_out"``     — a host-tier swap-out silently fails (as if the
+                       pinned host pool rejected the DMA): the engine
+                       must fall back to plain eviction / recompute
+                       preemption, never losing exactness;
+* ``"swap_in"``      — a host-resident page cannot be streamed back
+                       (entry dropped, as if the host pool was torn
+                       down): the engine must fall back to the
+                       recompute path;
+* ``"swap_corrupt"`` — a host-resident page's bytes are flipped before
+                       the swap-in integrity check, so ``take`` raises
+                       ``PageCorruptionError`` — the engine must
+                       quarantine ONLY the owning request.
 
 Faults fire two ways: an explicit ``schedule`` of ``(tick, site)`` /
 ``(tick, site, key)`` points (CI pins exact scenarios), and/or a
@@ -44,7 +56,8 @@ import hashlib
 import time
 from typing import Iterable, Optional
 
-SITES = ("alloc", "prefix_claim", "launch", "logits", "sampler")
+SITES = ("alloc", "prefix_claim", "launch", "logits", "sampler",
+         "swap_out", "swap_in", "swap_corrupt")
 
 
 class InjectedFault(RuntimeError):
@@ -141,6 +154,22 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected sampler fault (tick={tick}, slot={slot})"
             )
+
+    def swap_out_fails(self, tick: int, key: int = 0) -> bool:
+        """One host-tier swap-out attempt fails (fall back to plain
+        eviction / recompute preemption).  Keyed by the evicted pid."""
+        return self.fire("swap_out", tick, key)
+
+    def swap_in_fails(self, tick: int, key: int = 0) -> bool:
+        """One host-tier swap-in attempt fails (entry unusable — fall
+        back to recompute).  Keyed by the host handle."""
+        return self.fire("swap_in", tick, key)
+
+    def swap_corrupts(self, tick: int, key: int = 0) -> bool:
+        """Flip a stored byte before this swap-in's integrity check, so
+        verification raises ``PageCorruptionError``.  Keyed by the host
+        handle."""
+        return self.fire("swap_corrupt", tick, key)
 
     # ---------------------------------------------------------- reporting
     def counts(self) -> dict:

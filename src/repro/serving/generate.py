@@ -153,6 +153,14 @@ class Request:
     _progress_tick: int = dataclasses.field(default=0, repr=False, compare=False)
     # transient-admission-failure retry budget (fault containment)
     _admit_retries: int = dataclasses.field(default=0, repr=False, compare=False)
+    # length of the prompt the CALLER submitted.  A preemption requeue
+    # folds generated tokens into the prompt (prompt := prompt + out); a
+    # SECOND preemption must append only the output suffix generated
+    # since, or the folded tokens double-count (wrong KV, shifted sample
+    # positions).  None = nothing folded yet (len(prompt) is original).
+    _orig_plen: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     # preemption resume chain: the engine requeues a preempted request as
     # a NEW Request (prompt := prompt + generated); cancel() walks this
     # link so cancelling the handle the caller submitted still lands

@@ -46,6 +46,9 @@ shape-stable for jit.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -312,3 +315,283 @@ def state_copy_row(live, axes, src, dst):
         return jax.lax.dynamic_update_slice_in_dim(lv, one, dst, axis=ax)
 
     return jax.tree.map(cp, live, axes)
+
+
+# ------------------------------------------------------ host page tier
+#
+# The second level of the page hierarchy: a bounded pinned-host-RAM pool
+# that parked (refcount-0) prefix pages and preemption-evicted pages swap
+# OUT to, and stream back IN from on demand.  Swapping is a bytes-move,
+# not a recompute, so preemption-resume restores state bit-identically
+# and the prefix LRU can retain far more parked conversations than HBM
+# holds.
+#
+# Identity model: the HBM page id is a *physical* slot — it goes back to
+# the allocator free list at swap-out and a FRESH pid is allocated at
+# swap-in.  A host-resident page is therefore keyed by an opaque integer
+# **handle** (plus, for prefix pages, its chain hash via
+# ``PrefixCache.host_register``), never by a pid.  That keeps the
+# existing free/live/parked partition over pids intact and makes the
+# cross-tier invariant crisp: a chain hash resolves to an HBM pid OR a
+# host handle, never both, and handles never appear in block tables.
+#
+# Integrity: a blake2b digest over every per-page array (dtype + shape +
+# bytes) is stamped at swap-out and re-verified at swap-in; a mismatch
+# raises the typed ``PageCorruptionError`` so the engine can quarantine
+# only the owning request and fall back to recompute — the universal
+# degraded mode.  Checksums exist exactly for host-resident entries
+# (``serving/audit.py`` checks this), HBM pages have none.
+
+# handles live far outside any plausible pid range so an accidental
+# handle-in-block-table shows up as an out-of-range page id, loudly
+_HANDLE_BASE = 1 << 40
+
+
+class PageCorruptionError(Exception):
+    """A swapped-in page failed its integrity check (digest mismatch).
+
+    Typed so the engine can contain the blast radius to the owning
+    request (quarantine + recompute fallback) instead of crashing the
+    tick loop."""
+
+    def __init__(self, handle: int, kind: str | None, detail: str = ""):
+        self.handle = handle
+        self.kind = kind
+        super().__init__(
+            f"host page {handle} ({kind}) failed integrity verification"
+            + (f": {detail}" if detail else ""))
+
+
+def page_digest(arrays) -> bytes:
+    """Order-, dtype- and shape-sensitive blake2b over a page's arrays."""
+    h = hashlib.blake2b(digest_size=16)
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(np.asarray(a.shape, "<i8").tobytes())
+        h.update(a.tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass
+class _HostEntry:
+    kind: str
+    arrays: list  # np.ndarray snapshots of the per-page pool leaves
+    digest: bytes
+    nbytes: int
+    pinned: bool  # carried by a queued (preempted) request: not LRU-evictable
+    meta: dict
+
+
+class HostPageTier:
+    """Bounded host-RAM pool of swapped-out pages, LRU over unpinned.
+
+    ``put`` snapshots device bytes (the caller fetches them — see
+    ``kv_page_fetch`` / ``state_page_fetch``) and stamps a digest;
+    ``take`` verifies and CONSUMES the entry (the page is becoming
+    HBM-resident again, one tier per page).  ``pinned`` entries are
+    preemption carries referenced by a queued request and are only
+    dropped explicitly; unpinned (prefix) entries may be LRU-evicted via
+    ``evict_lru`` when the tier is full — eviction from the last tier is
+    plain data loss, recompute covers it."""
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = int(capacity)
+        self.entries: OrderedDict[int, _HostEntry] = OrderedDict()
+        self._next = _HANDLE_BASE + 1
+        self.bytes_resident = 0
+
+    # ------------------------------------------------------------ sizing
+    def used(self) -> int:
+        return len(self.entries)
+
+    def full(self) -> bool:
+        return len(self.entries) >= self.capacity
+
+    def has(self, handle: int) -> bool:
+        return handle in self.entries
+
+    def kind_of(self, handle: int) -> str | None:
+        e = self.entries.get(handle)
+        return e.kind if e is not None else None
+
+    # ------------------------------------------------------------- moves
+    def put(self, arrays, kind: str, pinned: bool = False,
+            meta: dict | None = None) -> int:
+        """Store one page's host-side arrays; returns its handle."""
+        assert not self.full(), "caller must evict_lru() or fall back"
+        # np.array copies: the snapshot must be writable (fault seams flip
+        # bytes) and independent of any zero-copy device_get aliasing
+        arrays = [np.array(a) for a in arrays]
+        handle = self._next
+        self._next += 1
+        nbytes = sum(a.nbytes for a in arrays)
+        self.entries[handle] = _HostEntry(
+            kind=kind, arrays=arrays, digest=page_digest(arrays),
+            nbytes=nbytes, pinned=pinned, meta=dict(meta or {}))
+        self.bytes_resident += nbytes
+        return handle
+
+    def take(self, handle: int, expect_kind: str | None = None) -> _HostEntry:
+        """Verify + consume an entry (swap-in).  Digest mismatch drops the
+        entry and raises ``PageCorruptionError`` — the bytes are gone
+        either way; recompute is the fallback."""
+        e = self.entries.pop(handle)
+        self.bytes_resident -= e.nbytes
+        if expect_kind is not None and e.kind != expect_kind:
+            raise PageCorruptionError(handle, e.kind,
+                                      f"expected kind {expect_kind!r}")
+        if page_digest(e.arrays) != e.digest:
+            raise PageCorruptionError(handle, e.kind, "digest mismatch")
+        return e
+
+    def drop(self, handle: int) -> None:
+        e = self.entries.pop(handle, None)
+        if e is not None:
+            self.bytes_resident -= e.nbytes
+
+    def pin(self, handle: int, pinned: bool = True) -> None:
+        self.entries[handle].pinned = pinned
+
+    def evict_lru(self) -> tuple[int, dict] | None:
+        """Drop the LRU *unpinned* entry; returns (handle, meta) so the
+        caller can unregister its chain hash, or None if all pinned."""
+        for handle, e in self.entries.items():
+            if not e.pinned:
+                del self.entries[handle]
+                self.bytes_resident -= e.nbytes
+                return handle, e.meta
+        return None
+
+    def corrupt(self, handle: int, byte: int = 0) -> None:
+        """Flip one stored byte (fault seam ``swap_corrupt`` + tests):
+        the next ``take`` of this handle must raise PageCorruptionError."""
+        e = self.entries[handle]
+        for a in e.arrays:
+            if a.nbytes:
+                flat = a.view(np.uint8).reshape(-1)
+                flat[byte % flat.size] ^= 0xFF
+                return
+
+    def snapshot(self) -> dict:
+        return {
+            "used": self.used(),
+            "capacity": self.capacity,
+            "bytes_resident": self.bytes_resident,
+            "pinned": sum(1 for e in self.entries.values() if e.pinned),
+        }
+
+
+# ------------------------------------------- device <-> host page moves
+#
+# KV pool leaves are (L, P, ps, ...) with the page id on axis 1; leaves
+# with ndim < 3 are pool-global metadata (per-tensor scales) that never
+# leave HBM — exactly the leaves scatter_prefill_pages passes through.
+# State pool leaves put the page id on axis 0 and REPLICATED leaves are
+# pool-global.  Fetches gather every per-page slice in ONE device_get
+# (one transfer); inserts are donated jits so a swap-in updates the pool
+# in place instead of copying it.
+
+def kv_page_fetch(pool, pid: int) -> list[np.ndarray]:
+    """device_get the per-page slices of every per-page KV pool leaf."""
+    sel = [leaf[:, pid] for leaf in jax.tree.leaves(pool)
+           if getattr(leaf, "ndim", 0) >= 3]
+    return [np.asarray(a) for a in jax.device_get(sel)]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _kv_page_insert(pool, arrays, pid):
+    arrays = list(arrays)
+    leaves, treedef = jax.tree.flatten(pool)
+    out = []
+    for leaf in leaves:
+        if getattr(leaf, "ndim", 0) >= 3:
+            out.append(leaf.at[:, pid].set(arrays.pop(0).astype(leaf.dtype)))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def kv_page_insert(pool, arrays, pid: int):
+    """Write host arrays back into KV pool page ``pid`` (donated jit)."""
+    return _kv_page_insert(pool, tuple(jnp.asarray(a) for a in arrays),
+                           jnp.int32(pid))
+
+
+def state_page_fetch(spool, axes, pid: int) -> list[np.ndarray]:
+    """device_get one state page (checkpoint row) from the state pool."""
+    sel = [pl[pid] for pl, ax in zip(jax.tree.leaves(spool),
+                                     jax.tree.leaves(axes))
+           if ax != REPLICATED]
+    return [np.asarray(a) for a in jax.device_get(sel)]
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnums=(1,))
+def _state_page_insert(spool, axes_leaves, arrays, pid):
+    arrays = list(arrays)
+    leaves, treedef = jax.tree.flatten(spool)
+    out = []
+    for leaf, ax in zip(leaves, axes_leaves):
+        if ax == REPLICATED:
+            out.append(leaf)
+        else:
+            out.append(leaf.at[pid].set(arrays.pop(0).astype(leaf.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def state_page_insert(spool, axes, arrays, pid: int):
+    """Write host arrays back into state pool page ``pid`` (donated jit)."""
+    return _state_page_insert(
+        spool, tuple(jax.tree.leaves(axes)),
+        tuple(jnp.asarray(a) for a in arrays), jnp.int32(pid))
+
+
+# ------------------------------------------------- cold-page recompression
+#
+# Opt-in accuracy-vs-bits ladder for COLD (parked, LRU-tail) HBM pages
+# under sustained pool pressure, in the spirit of ZeroQuant-V2's tiered
+# laddering: native → int8 → bcq4 *value precision*.  The page keeps its
+# pool layout (the tree's dtypes are jit-static), so recompression is a
+# fake-quant round-trip applied in place to the page's floating-point
+# leaves — the information loss is exactly that of the lower-precision
+# code, while integer leaves (already-quantized payloads) pass through
+# untouched.  Downstream equivalence becomes tolerance-tier, not exact;
+# swapped pages are NEVER recompressed in flight (swap stays bitwise).
+
+RECOMPRESS_STAGES = ("native", "int8", "bcq4")
+# symmetric uniform levels per stage; int8 round-trips any integer-valued
+# bf16/f32 payload |x| <= 127 exactly (the test stub relies on this)
+_STAGE_LEVELS = {"int8": 127, "bcq4": 7}
+
+
+def _fake_quant(x, levels: int):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    # integer-valued payloads within range are exactly representable at
+    # this bit width — snap the scale to 1 so the stage is lossless there
+    exact = jnp.logical_and(jnp.all(xf == jnp.round(xf)), amax <= levels)
+    scale = jnp.where(exact, 1.0, jnp.where(amax > 0, amax / levels, 1.0))
+    q = jnp.clip(jnp.round(xf / scale), -levels, levels)
+    return (q * scale).astype(x.dtype)
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnums=(2,))
+def _kv_page_recompress(pool, pid, levels):
+    leaves, treedef = jax.tree.flatten(pool)
+    out = []
+    for leaf in leaves:
+        if getattr(leaf, "ndim", 0) >= 3 and jnp.issubdtype(
+                leaf.dtype, jnp.floating):
+            out.append(leaf.at[:, pid].set(_fake_quant(leaf[:, pid], levels)))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def kv_page_recompress(pool, pid: int, stage: str):
+    """Requantize KV page ``pid``'s float leaves in place to ``stage``
+    value precision.  ``native`` is the identity."""
+    if stage == "native":
+        return pool
+    return _kv_page_recompress(pool, jnp.int32(pid), _STAGE_LEVELS[stage])

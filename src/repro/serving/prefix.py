@@ -64,8 +64,15 @@ class PrefixCache:
         self.by_hash: dict[bytes, int] = {}
         self.hash_of: dict[int, bytes] = {}
         self.reclaimable: OrderedDict[int, None] = OrderedDict()
+        # second tier: chain hash -> HostPageTier handle for parked pages
+        # whose bytes were demoted to host RAM.  Disjoint from by_hash by
+        # construction (one tier per page — serving/audit.py checks it):
+        # a hash resolves to an HBM pid OR a host handle, never both.
+        self.host_by_hash: dict[bytes, int] = {}
+        self.hash_of_handle: dict[int, bytes] = {}
         self.hits = 0
         self.misses = 0
+        self.host_hits = 0
 
     def peek(self, h: bytes) -> Optional[int]:
         """Non-mutating probe: page holding this chunk, or None.  Use for
@@ -86,8 +93,15 @@ class PrefixCache:
 
     def register(self, h: bytes, pid: int) -> None:
         assert pid != NULL_PAGE
-        # A racing identical registration keeps the earlier page.
-        if h not in self.by_hash and pid not in self.hash_of:
+        # A racing identical registration keeps the earlier copy — in
+        # EITHER tier (a recomputed chunk whose original page was demoted
+        # to host RAM is the same race): the fresh page stays private to
+        # its request, preserving one-tier-per-page.
+        if (
+            h not in self.by_hash
+            and h not in self.host_by_hash
+            and pid not in self.hash_of
+        ):
             self.by_hash[h] = pid
             self.hash_of[pid] = h
 
@@ -103,11 +117,52 @@ class PrefixCache:
     def evict_one(self) -> Optional[int]:
         """Drop the LRU reclaimable page; returns its id (now unregistered,
         refcount 0 — caller pushes it back to the allocator free list)."""
+        popped = self.pop_lru()
+        return popped[1] if popped is not None else None
+
+    def pop_lru(self) -> Optional[tuple[bytes, int]]:
+        """Pop + forget the LRU reclaimable page, returning ``(hash, pid)``
+        so a host tier can re-home the bytes under the same hash
+        (``host_register``) before the pid goes back to the free list."""
         if not self.reclaimable:
             return None
         pid, _ = self.reclaimable.popitem(last=False)
+        h = self.hash_of.get(pid)
         self.forget(pid)
-        return pid
+        return h, pid
+
+    # ------------------------------------------------------- host tier
+    def host_register(self, h: bytes, handle: int) -> None:
+        """Re-home an evicted parked page's hash onto its host handle —
+        the prefix LRU now spans tiers."""
+        assert h not in self.by_hash and h not in self.host_by_hash
+        self.host_by_hash[h] = handle
+        self.hash_of_handle[handle] = h
+
+    def host_peek(self, h: bytes) -> Optional[int]:
+        """Non-mutating: host handle caching this chunk, or None."""
+        return self.host_by_hash.get(h)
+
+    def host_claim(self, h: bytes) -> Optional[int]:
+        """Claim a host-resident chunk for swap-in: pops the mapping (the
+        page is moving back to HBM — the caller registers the fresh pid
+        after a verified restore) and counts a prefix hit."""
+        handle = self.host_by_hash.pop(h, None)
+        if handle is not None:
+            del self.hash_of_handle[handle]
+            self.hits += 1
+            self.host_hits += 1
+        return handle
+
+    def host_forget(self, handle: int) -> None:
+        """Drop a host handle's registration (tier LRU eviction or a
+        corrupt entry): the chunk is simply no longer cached anywhere."""
+        h = self.hash_of_handle.pop(handle, None)
+        if h is not None:
+            self.host_by_hash.pop(h, None)
+
+    def host_count(self) -> int:
+        return len(self.host_by_hash)
 
     def forget(self, pid: int) -> None:
         """Remove a page's registration (eviction or COW replacement)."""
@@ -124,4 +179,5 @@ class PrefixCache:
         return {
             "registered_pages": len(self.by_hash),
             "reclaimable_pages": len(self.reclaimable),
+            "host_pages": len(self.host_by_hash),
         }

@@ -159,6 +159,7 @@ class StatePagedEngine(PagedEngine):
         degrade_after: Optional[int] = None,
         recover_after: int = 16,
         degraded_prefix_target: int = 0,
+        host_pages: int = 0,
     ):
         spec = getattr(api, "page_spec", None)
         if spec is None or spec.layout != "state_checkpoint":
@@ -175,7 +176,7 @@ class StatePagedEngine(PagedEngine):
             api, params, n_slots, max_len, page_size, eos_id, prefix_caching,
             profile_sync, pipeline_depth, telemetry, fault_injector, strict,
             nan_guard, audit_every, max_queue, shed_stuck, degrade_after,
-            recover_after, degraded_prefix_target,
+            recover_after, degraded_prefix_target, host_pages,
         )
         self.spec = spec
         self.shared_enc = bool(spec.shared_encoder)
@@ -272,6 +273,19 @@ class StatePagedEngine(PagedEngine):
                       "ckpt_skips", "encoder_launches")
         }
 
+    # ----------------------------------------------- host-tier layout hooks
+    # the host tier accepts state checkpoint pages; parked shared_ro
+    # encoder pages stay re-encodable (plain eviction) by the kind gate
+    HOST_SWAP_KIND = KIND_STATE
+
+    def _fetch_page_arrays(self, pid: int) -> list:
+        return pages_lib.state_page_fetch(self.spool, self.axes, pid)
+
+    def _insert_page_arrays(self, pid: int, arrays) -> None:
+        self.spool = pages_lib.state_page_insert(
+            self.spool, self.axes, arrays, pid
+        )
+
     # ----------------------------------------------------------- plumbing
     def _free_slot(self, i: int):
         s = self.slots[i]
@@ -285,10 +299,78 @@ class StatePagedEngine(PagedEngine):
             if s2.reserved_by == i:
                 s2.reserved_by = None
 
+    def _host_carry_state(self, slot: _StateSlot, resumed: Request) -> bool:
+        """Snapshot the victim's LIVE row (not its up-to-page_size-stale
+        checkpoint) to a pinned host-tier entry, staged through a state
+        page: re-admission then restores the exact preemption-point state
+        and replays ZERO tokens.  Refusals (tier off, injected swap_out
+        fault, tier full of pinned entries, alloc-starved staging,
+        unsynced in-flight row, pending fork) return False — the
+        checkpoint-replay carry below still bounds the replay."""
+        tier = self.host_tier
+        if (
+            tier is None or slot.pos <= 0 or resumed.n_samples > 1
+            # an unsynced in-flight launch means the row covers one token
+            # whose result was never folded into ``out`` — only the
+            # recompute/replay paths can regenerate it
+            or slot.pos != len(resumed.prompt) - 1
+        ):
+            return False
+        if self.faults is not None and self.faults.swap_out_fails(
+            self._tick, key=int(resumed.rid)
+        ):
+            self._cs_swap["swap_skips"].inc()
+            return False
+        while tier.full():
+            ev = tier.evict_lru()
+            if ev is None:
+                self._cs_swap["swap_skips"].inc()
+                return False  # every host entry pinned
+            self.prefix.host_forget(ev[0])
+        i = self.slots.index(slot)
+        # stage the live row through a state page.  A private checkpoint
+        # page is overwritten in place (its ckpt_pos advances with it, so
+        # the checkpoint carry stays consistent); a fork-shared page must
+        # survive for the siblings, so stage through a transient page.
+        if (
+            slot.ckpt_page is not None
+            and self.pool_mgr.refcount[slot.ckpt_page] == 1
+        ):
+            stage_pid, transient = slot.ckpt_page, False
+        else:
+            stage_pid = self._alloc_page(KIND_STATE)
+            if stage_pid is None:
+                self._cs_swap["swap_skips"].inc()
+                return False
+            transient = True
+        dsts = np.full((self.n_slots,), NULL_PAGE, np.int32)
+        dsts[i] = stage_pid
+        self.spool = self._ckpt_rows(self.spool, self.live, jnp.asarray(dsts))
+        if not transient:
+            slot.ckpt_pos = slot.pos
+        arrays = self._fetch_page_arrays(stage_pid)
+        if transient:
+            self._drop_page(stage_pid)
+        handle = tier.put(
+            arrays, KIND_STATE, pinned=True, meta={"rid": int(resumed.rid)}
+        )
+        resumed._host_state_resume = (handle, slot.pos)
+        self._cs_swap["swap_outs"].inc()
+        self._cs_swap["swap_bytes"].inc(sum(a.nbytes for a in arrays))
+        self.telemetry.instant(
+            "swap_out_preempt", rid=int(resumed.rid), pages=1
+        )
+        return True
+
     def _carry_resume_state(self, slot: _StateSlot, resumed: Request) -> None:
         """Move the victim's checkpoint (and encoder page) refs onto the
         resumed request BEFORE _free_slot drops them: re-admission then
-        restores + replays ≤ page_size tokens instead of the full prompt."""
+        restores + replays ≤ page_size tokens instead of the full prompt.
+        With the host tier, the live row is ALSO snapshotted to a pinned
+        host entry — re-admission restores it verified and replays zero
+        tokens; the checkpoint ref rides along as the swap-in-refusal
+        fallback."""
+        self._host_carry_state(slot, resumed)
         if slot.ckpt_page is not None:
             resumed._state_resume = (slot.ckpt_page, slot.ckpt_pos)
             slot.ckpt_page = None  # ref travels with the queued request
@@ -296,7 +378,15 @@ class StatePagedEngine(PagedEngine):
             resumed._enc_page = slot.enc_page
             slot.enc_page = None
 
+    def _drop_host_state_handle(self, req: Request) -> None:
+        hsr = getattr(req, "_host_state_resume", None)
+        if hsr is not None:
+            if self.host_tier is not None:
+                self.host_tier.drop(hsr[0])
+            req._host_state_resume = None
+
     def _release_carried(self, req: Request) -> None:
+        self._drop_host_state_handle(req)
         carried = getattr(req, "_state_resume", None)
         if carried is not None:
             self._drop_page(int(carried[0]))
@@ -365,7 +455,106 @@ class StatePagedEngine(PagedEngine):
             self.prefix.register(h, pid)
         return pid
 
+    def _try_resume_from_host_state(self, req: Request, slot_idx: int,
+                                    hsr: tuple) -> Optional[bool]:
+        """Re-admit a preemption victim from its host-resident live-row
+        snapshot: one verified restore at the exact preemption position —
+        ZERO replay tokens (vs ≤ page_size via the HBM checkpoint, vs the
+        full prompt without either).  Returns True (admitted), False
+        (blocked on pages; the pinned entry survives for a retry), or
+        None (fell back — handle dropped; the carried ``_state_resume``
+        checkpoint ref, when present, still bounds the replay)."""
+        handle, pos = hsr
+        tier = self.host_tier
+        plen = len(req.prompt)
+
+        def _fallback() -> None:
+            self._drop_host_state_handle(req)
+
+        if (
+            tier is None
+            or not tier.has(handle)
+            # the recompute path raises the typed too-long error; resuming
+            # here would mask that contract
+            or plen >= self.max_len
+            or pos != plen - 1
+        ):
+            _fallback()
+            return None
+        if self.shared_enc and getattr(req, "_enc_page", None) is None:
+            _fallback()  # lost the encoder carry: re-claim via admission
+            return None
+        if self.faults is not None and self.faults.swap_in_fails(
+            self._tick, key=int(req.rid)
+        ):
+            self._cs_swap["swap_skips"].inc()
+            _fallback()
+            return None
+        if self._available_pages() < 1 + self.watermark:
+            return False  # blocked: pinned entry survives for a retry
+        pid = self._alloc_page(KIND_STATE)
+        if pid is None:
+            # allocation flake (injected or racing): nothing consumed,
+            # the checkpoint-replay path stays exact
+            self._cs_swap["swap_skips"].inc()
+            _fallback()
+            return None
+        if self.faults is not None and self.faults.swap_corrupts(
+            self._tick, key=int(req.rid)
+        ):
+            tier.corrupt(handle)
+        self._cs_swap["swap_ins"].inc()
+        try:
+            entry = tier.take(handle, expect_kind=KIND_STATE)
+        except pages_lib.PageCorruptionError:
+            self._drop_page(pid)  # fresh state page, nothing restored
+            req._host_state_resume = None  # take consumed the entry
+            self._cs_swap["corrupt_swapins"].inc()
+            self.telemetry.instant("swap_corrupt", rid=int(req.rid))
+            self._release_carried(req)
+            raise  # _admit quarantines ONLY this request
+        self._cs_swap["verified_swapins"].inc()
+        self._cs_swap["swap_bytes"].inc(entry.nbytes)
+        req._host_state_resume = None
+        self._insert_page_arrays(pid, entry.arrays)
+        one = self._restore_one(self.spool, jnp.int32(pid))
+        self.live = self._insert_row(self.live, one, jnp.int32(slot_idx))
+        self._cs["state_restores"].inc()
+        # the carried HBM checkpoint (the swap-in-refusal fallback) is now
+        # redundant: the restored page itself is a checkpoint at ``pos``
+        carried = getattr(req, "_state_resume", None)
+        if carried is not None:
+            self._drop_page(int(carried[0]))
+            req._state_resume = None
+        enc_page = None
+        if self.shared_enc:
+            enc_page = int(req._enc_page)
+            req._enc_page = None  # ownership moves to the slot
+        self.telemetry.on_admit(req, time.perf_counter())
+        self.slots[slot_idx] = _StateSlot(
+            req=req, pos=pos, admit_seq=self._admit_counter,
+            ckpt_page=pid, ckpt_pos=pos, enc_page=enc_page,
+        )
+        self._admit_counter += 1
+        # rejoin decode directly: the row covers ``pos`` tokens and the
+        # next fused launch consumes the resumed prompt's final token —
+        # zero replay at admission (replay_tokens stays flat)
+        self._next_tok[slot_idx] = int(np.asarray(req.prompt)[-1])
+        self._chained[slot_idx] = False
+        req._progress_tick = self._tick
+        self.telemetry.instant(
+            "swap_resume", rid=int(req.rid), pages=1, pos=int(pos)
+        )
+        self._finish_if_budget_spent(slot_idx)
+        return True
+
     def _try_admit(self, req: Request, slot_idx: int) -> bool:
+        hsr = getattr(req, "_host_state_resume", None)
+        if hsr is not None:
+            res = self._try_resume_from_host_state(req, slot_idx, hsr)
+            if res is not None:
+                return res
+            # fell back (handle dropped): checkpoint-replay admission below
         prompt = np.asarray(req.prompt, np.int64)
         plen = len(prompt)
         if plen >= self.max_len:

@@ -76,6 +76,17 @@ ROBUSTNESS_STAT_KEYS = (
     "degraded_ticks",
 )
 
+# Host-tier swap counters (docs/ROBUSTNESS.md memory-tier table).  Also
+# registry-only for the same reason as ROBUSTNESS_STAT_KEYS.  Always
+# registered (zero when the tier is disabled) so scrapers and
+# tools/check_telemetry.py see a stable catalogue.  Accounting invariant
+# checked by tools/check_chaos.py: swap_ins == verified_swapins +
+# corrupt_swapins.
+SWAP_STAT_KEYS = (
+    "swap_outs", "swap_ins", "verified_swapins", "corrupt_swapins",
+    "swap_bytes", "swap_skips", "recompressed_pages",
+)
+
 
 # ------------------------------------------------------------ instruments
 class Counter:
@@ -437,6 +448,14 @@ class Telemetry:
         prefix = engine.prefix.snapshot()
         g("prefix_reclaimable_pages", "pages").set(prefix["reclaimable_pages"])
         g("prefix_registered_pages", "pages").set(prefix["registered_pages"])
+        g("prefix_host_pages", "pages").set(prefix.get("host_pages", 0))
+        # host swap tier occupancy (zeros when the tier is disabled, so
+        # the gauge catalogue is independent of configuration)
+        tier = getattr(engine, "host_tier", None)
+        g("host_pages_used", "pages").set(tier.used() if tier else 0)
+        g("host_pages_capacity", "pages").set(tier.capacity if tier else 0)
+        g("host_bytes_resident", "bytes").set(
+            tier.bytes_resident if tier else 0)
         g("watermark_headroom", "pages").set(
             engine._available_pages() - engine.watermark)
         g("queue_depth", "requests").set(len(engine.queue))

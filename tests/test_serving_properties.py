@@ -1,8 +1,11 @@
 """Stateful Hypothesis property suites for the serving layer.
 
-1. **PoolPrefixMachine** — the allocator pair (PagePool + PrefixCache),
-   driving the exact lifecycle the PagedEngine uses: alloc → register →
-   ref/deref → park-reclaimable → revive / evict.
+1. **PoolPrefixMachine** — the allocator trio (PagePool + PrefixCache +
+   HostPageTier), driving the exact lifecycle the PagedEngine uses:
+   alloc → register → ref/deref → park-reclaimable → revive / evict —
+   plus the host-tier demotion cycle: evict-to-host (bytes re-homed
+   under the chain hash) → verified swap-in to a fresh pid / corrupt
+   swap-in (entry gone everywhere) / host-LRU eviction.
 
    Invariants checked after EVERY rule:
    * refcounts are never negative (and the null page's stays 0),
@@ -11,13 +14,20 @@
    * ``evict_one`` never reclaims a referenced page,
    * revive/ref/forget round-trips preserve the conservation law
      ``available() + in_use == n_pages - 1`` (every non-null page is
-     exactly one of: free, actively referenced, or parked reclaimable),
-   * the prefix registration maps stay a bijection.
+     exactly one of: free, actively referenced, or parked reclaimable —
+     host entries hold no HBM pid, so demotions never bend the law),
+   * the prefix registration maps stay a bijection,
+   * **one tier per page**: a chain hash resolves to an HBM pid OR a
+     host handle, never both; the host maps stay a bijection; the tier
+     stays under capacity with consistent byte accounting and an
+     integrity digest on every entry.
 
 2. **FaultyEngineMachine** — a REAL PagedEngine over the deterministic
    stub model (tests/serving_stub.py), interleaving submits / ticks with
    injected chaos: allocator flakes, dropped prefix claims, poisoned
-   logits, raising samplers, cancels, and instantly-expiring deadlines.
+   logits, raising samplers, swap-seam faults (refused swap-outs /
+   swap-ins and corrupted host entries over a live host tier), cancels,
+   and instantly-expiring deadlines.
    After every rule the serving/audit.py invariant sweep must be clean
    (no page leaks, refcount ≡ table refs, prefix bijection); at teardown
    the engine must drain with zero referenced pages, every request
@@ -41,13 +51,20 @@ from repro.serving.audit import audit_engine
 from repro.serving.engine import PagedEngine
 from repro.serving.faults import FaultInjector
 from repro.serving.generate import Request
-from repro.serving.pages import NULL_PAGE, PagePool
+from repro.serving.pages import (
+    KIND_KV,
+    NULL_PAGE,
+    HostPageTier,
+    PageCorruptionError,
+    PagePool,
+)
 from repro.serving.prefix import PrefixCache
 
 # profiles live in tests/conftest.py: "dev" (randomized) is the default;
 # CI selects the derandomized "ci" profile via --hypothesis-profile=ci
 
 N_PAGES = 9
+HOST_CAP = 4
 
 
 class PoolPrefixMachine(RuleBasedStateMachine):
@@ -55,9 +72,11 @@ class PoolPrefixMachine(RuleBasedStateMachine):
         super().__init__()
         self.pool = PagePool(N_PAGES)
         self.prefix = PrefixCache()
+        self.tier = HostPageTier(HOST_CAP)
         # model state mirroring the engine's view
         self.active: set[int] = set()  # refcount > 0
         self.parked: set[int] = set()  # refcount 0, kept by the prefix LRU
+        self.host: set[int] = set()  # host-tier handles (no HBM pid)
         self.next_hash = 0
 
     # ------------------------------------------------------------- rules
@@ -157,6 +176,69 @@ class PoolPrefixMachine(RuleBasedStateMachine):
         assert not self.prefix.knows(pid)
         assert self.pool.refcount[pid] > 0
 
+    # ----------------------------------------------------- host-tier rules
+    @precondition(lambda self: self.parked)
+    @rule()
+    def evict_to_host(self):
+        """engine._evict_parked_page with the tier on: the LRU parked
+        page's bytes demote to host RAM under its chain hash; the pid
+        goes back to the free list."""
+        if self.tier.full():
+            ev = self.tier.evict_lru()
+            assert ev is not None  # this machine never pins entries
+            self.prefix.host_forget(ev[0])
+            self.host.discard(ev[0])
+        h, pid = self.prefix.pop_lru()
+        assert pid in self.parked and self.pool.refcount[pid] == 0
+        # stamp the payload with the hash ordinal so swap-in can verify
+        # the bytes survived the round trip
+        handle = self.tier.put([np.full((4,), h[1], np.float32)], KIND_KV)
+        self.prefix.host_register(h, handle)
+        self.host.add(handle)
+        self.pool.release(pid)
+        self.parked.discard(pid)
+
+    @precondition(lambda self: self.host)
+    @rule(data=st.data())
+    def swap_in(self, data):
+        """Host prefix hit: claim the handle, verify-take, restore into a
+        fresh pid, re-register the hash — the page is HBM-resident again
+        (exactly one tier, before and after)."""
+        handle = data.draw(st.sampled_from(sorted(self.host)))
+        h = self.prefix.hash_of_handle[handle]
+        pid = self.pool.alloc()
+        if pid is None:
+            return  # admission would fall back; entry stays host-resident
+        assert self.prefix.host_claim(h) == handle
+        entry = self.tier.take(handle)
+        assert entry.arrays[0][0] == h[1], "payload changed across the swap"
+        self.host.discard(handle)
+        self.prefix.register(h, pid)
+        self.active.add(pid)
+
+    @precondition(lambda self: self.host)
+    @rule(data=st.data())
+    def corrupt_swap_in(self, data):
+        """swap_corrupt seam: verification must raise and the entry is
+        gone from every map — the chunk is simply no longer cached."""
+        handle = data.draw(st.sampled_from(sorted(self.host)))
+        h = self.prefix.hash_of_handle[handle]
+        self.tier.corrupt(handle)
+        assert self.prefix.host_claim(h) == handle
+        with pytest.raises(PageCorruptionError):
+            self.tier.take(handle)
+        self.host.discard(handle)
+
+    @precondition(lambda self: self.host)
+    @rule()
+    def host_evict(self):
+        """Tier-full pressure: the LRU host entry drops and the chunk is
+        no longer cached anywhere (plain data loss, recompute covers it)."""
+        ev = self.tier.evict_lru()
+        assert ev is not None
+        self.prefix.host_forget(ev[0])
+        self.host.discard(ev[0])
+
     # -------------------------------------------------------- invariants
     @invariant()
     def refcounts_never_negative(self):
@@ -191,6 +273,26 @@ class PoolPrefixMachine(RuleBasedStateMachine):
         for h, pid in self.prefix.by_hash.items():
             assert self.prefix.hash_of[pid] == h
 
+    @invariant()
+    def one_tier_per_page(self):
+        # a chain hash resolves in at most ONE tier, and the host maps
+        # stay a bijection onto live tier entries
+        assert not (set(self.prefix.by_hash) & set(self.prefix.host_by_hash))
+        assert len(self.prefix.host_by_hash) == len(self.prefix.hash_of_handle)
+        for h, handle in self.prefix.host_by_hash.items():
+            assert self.prefix.hash_of_handle[handle] == h
+            assert self.tier.has(handle)
+
+    @invariant()
+    def host_tier_bounded_and_consistent(self):
+        assert set(self.tier.entries) == self.host
+        assert self.tier.used() <= self.tier.capacity
+        assert self.tier.bytes_resident == sum(
+            e.nbytes for e in self.tier.entries.values()
+        )
+        for e in self.tier.entries.values():
+            assert len(e.digest) == 16 and not e.pinned
+
 
 TestPoolPrefixProperties = PoolPrefixMachine.TestCase
 
@@ -213,6 +315,7 @@ class FaultyEngineMachine(RuleBasedStateMachine):
             _STUB_API, {}, n_slots=_N_SLOTS, max_len=_MAX_LEN, page_size=_PS,
             n_pages=24, chunked_prefill=True, prefill_chunk=2 * _PS,
             fault_injector=self.faults,
+            host_pages=6,  # the swap seams below need a live tier
         )
         self.submitted: list[Request] = []
         # rid → fault-free greedy reference from the ORIGINAL prompt (a
@@ -262,6 +365,20 @@ class FaultyEngineMachine(RuleBasedStateMachine):
     @rule()
     def raise_in_sampler(self):
         self.faults.schedule.add((self.engine._tick + 1, "sampler"))
+
+    @rule()
+    def flake_swap_seams(self):
+        """Refused swap-outs/swap-ins next ticks: the engine must fall
+        back to plain eviction / recompute without losing exactness."""
+        self.faults.schedule.add((self.engine._tick + 1, "swap_out"))
+        self.faults.schedule.add((self.engine._tick + 2, "swap_in"))
+
+    @rule()
+    def corrupt_swapped_pages(self):
+        """Every swap-in next tick reads flipped bytes: verification must
+        quarantine ONLY the owning request (a typed 'quarantined' error),
+        never a batchmate, never the loop."""
+        self.faults.schedule.add((self.engine._tick + 1, "swap_corrupt"))
 
     @precondition(lambda self: any(not r.done for r in self.submitted))
     @rule(data=st.data())

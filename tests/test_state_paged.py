@@ -152,6 +152,117 @@ def test_preempt_resume_bounded_replay(arch, depth):
     e1.audit(strict=True)
 
 
+# ------------------------------------------- host-tier zero-replay resume
+@pytest.mark.parametrize("arch", ("mamba2_130m", "whisper_base"))
+def test_preempt_resume_from_host_zero_replay(arch):
+    """With the host tier on, a preempted request's LIVE recurrent state
+    snapshots to a pinned host page and resume restores it verified —
+    bit-identical output with ZERO replayed tokens (the tierless path
+    above replays up to page_size from the last checkpoint)."""
+    cfg, api, params = _built(arch)
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (12,), 0, cfg.vocab)
+    )
+    frames = _frames(cfg)
+
+    def fresh(rid):
+        return Request(rid=rid, prompt=prompt, max_new=19, frames=frames)
+
+    e0 = StatePagedEngine(api, params, n_slots=2, max_len=ML, page_size=PS)
+    r0 = fresh(0)
+    e0.submit(r0)
+    e0.run_to_completion()
+    assert r0.done and r0.error is None, r0.error
+
+    e1 = StatePagedEngine(
+        api, params, n_slots=2, max_len=ML, page_size=PS, host_pages=8
+    )
+    r1 = fresh(1)
+    e1.submit(r1)
+    for _ in range(9):
+        e1.step()
+    e1.drain()
+    assert 0 < len(r1.out) < 20, "must preempt MID-generation"
+    assert e1._preempt_one(None) is not None
+    sw = e1.health()["swap"]
+    assert sw["swap_outs"] == 1, sw  # one state page carried, pinned
+    assert e1.health()["host_tier"]["pinned"] == 1
+    e1.audit(strict=True)  # the pinned carry is audit-clean mid-queue
+    e1.run_to_completion()
+    assert list(map(int, r1.out)) == list(map(int, r0.out)), arch
+    assert e1._cs["replay_tokens"].value == 0, "host resume must not replay"
+    assert e1._cs["state_restores"].value == 1
+    sw = e1.health()["swap"]
+    assert sw["swap_ins"] == 1 and sw["verified_swapins"] == 1, sw
+    assert sw["swap_ins"] == sw["verified_swapins"] + sw["corrupt_swapins"]
+    assert e1.health()["host_tier"] == {
+        "used": 0, "capacity": 8, "bytes_resident": 0, "pinned": 0
+    }
+    if cfg.family == "encdec":
+        assert e1._cs["encoder_launches"].value == 1, "resume must NOT re-encode"
+    e1.audit(strict=True)
+
+
+def test_host_swap_in_fault_falls_back_to_checkpoint_replay():
+    """A refused swap-in drops only the host carry: the legacy HBM
+    checkpoint reference is still held, so resume degrades to the
+    bounded-replay path — exact output, ≤ page_size tokens replayed."""
+    cfg, api, params = _built("mamba2_130m")
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (12,), 0, cfg.vocab)
+    )
+    e0 = StatePagedEngine(api, params, n_slots=2, max_len=ML, page_size=PS)
+    r0 = Request(rid=0, prompt=prompt, max_new=19)
+    e0.submit(r0)
+    e0.run_to_completion()
+
+    e1 = StatePagedEngine(
+        api, params, n_slots=2, max_len=ML, page_size=PS, host_pages=8,
+        fault_injector=FaultInjector(seed=1, rates={"swap_in": 1.0}),
+    )
+    r1 = Request(rid=1, prompt=prompt, max_new=19)
+    e1.submit(r1)
+    for _ in range(9):
+        e1.step()
+    e1.drain()
+    assert e1._preempt_one(None) is not None
+    fin, _ = e1.run_to_completion()
+    done = [r for r in fin if r.error is None]
+    assert done and list(map(int, done[0].out)) == list(map(int, r0.out))
+    assert 0 < e1._cs["replay_tokens"].value <= PS
+    assert e1.health()["host_tier"]["used"] == 0  # refused carry dropped
+    e1.audit(strict=True)
+
+
+def test_host_swap_corrupt_quarantines_owner_state_layout():
+    """A corrupted state-page swap-in quarantines exactly the owning
+    request with a typed integrity error; pages stay fully accounted."""
+    cfg, api, params = _built("mamba2_130m")
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (12,), 0, cfg.vocab)
+    )
+    eng = StatePagedEngine(
+        api, params, n_slots=2, max_len=ML, page_size=PS, host_pages=8,
+        fault_injector=FaultInjector(seed=1, rates={"swap_corrupt": 1.0}),
+    )
+    req = Request(rid=0, prompt=prompt, max_new=19)
+    eng.submit(req)
+    for _ in range(9):
+        eng.step()
+    eng.drain()
+    assert eng._preempt_one(None) is not None
+    fin, _ = eng.run_to_completion()
+    bad = [r for r in fin if r.error is not None]
+    assert len(bad) == 1 and bad[0].error.kind == "quarantined"
+    assert "integrity" in str(bad[0].error)
+    sw = eng.health()["swap"]
+    assert sw["corrupt_swapins"] == 1, sw
+    assert sw["swap_ins"] == sw["verified_swapins"] + sw["corrupt_swapins"]
+    assert eng.health()["host_tier"]["used"] == 0
+    eng.audit(strict=True)
+    assert int((eng.pool_mgr.refcount > 0).sum()) == 0
+
+
 # ------------------------------------------------------------------- forks
 def test_greedy_fork_identical():
     """n_samples=2 greedy forks share the live row + checkpoint page and

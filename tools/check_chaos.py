@@ -17,7 +17,12 @@ The report comes from ``launch/serve.py --chaos --chaos-report PATH``
   ``finished`` (possibly as several forked siblings), either clean or
   with a TYPED lifecycle error kind;
 * **internal consistency** — counters agree with per-request outcomes,
-  the fault log matches its by-site tally.
+  the fault log matches its by-site tally;
+* **swap accounting** (host tier) — every swap-in either verified its
+  integrity digest or quarantined its owner
+  (``swap_ins == verified_swapins + corrupt_swapins``), the host pool
+  drained back under its bound, and the cross-tier audit (one tier per
+  page, pinned entries anchored, digests present) came back clean.
 
 Only stdlib — runnable on artifacts downloaded from a CI run without
 the repo's python path set up.  Exits nonzero on the first violation.
@@ -31,7 +36,10 @@ SCHEMA = 1
 ERROR_KINDS = {
     "invalid", "too_long", "cancelled", "expired", "shed", "quarantined",
 }
-FAULT_SITES = {"alloc", "prefix_claim", "launch", "logits", "sampler"}
+FAULT_SITES = {"alloc", "prefix_claim", "launch", "logits", "sampler",
+               "swap_out", "swap_in", "swap_corrupt"}
+SWAP_KEYS = ("swap_outs", "swap_ins", "verified_swapins", "corrupt_swapins",
+             "swap_bytes", "swap_skips", "recompressed_pages")
 
 
 def fail(msg: str) -> None:
@@ -108,6 +116,28 @@ def check_report(path: str) -> None:
         fail(f"{path}: {n_errored} errored requests but only {n_counted} "
              f"counted across the lifecycle counters")
 
+    # --- host-tier swap accounting ---------------------------------------
+    swap = rep["health"].get("swap")
+    if not isinstance(swap, dict):
+        fail(f"{path}: health has no swap-counter section")
+    for key in SWAP_KEYS:
+        if not isinstance(swap.get(key), int) or swap[key] < 0:
+            fail(f"{path}: swap counter {key!r} missing or negative")
+    if swap["swap_ins"] != swap["verified_swapins"] + swap["corrupt_swapins"]:
+        fail(f"{path}: swap_ins={swap['swap_ins']} != verified "
+             f"{swap['verified_swapins']} + corrupt {swap['corrupt_swapins']}")
+    tier = rep["health"].get("host_tier")
+    if rep.get("host_tier"):
+        if not isinstance(tier, dict):
+            fail(f"{path}: --host-tier run reported no host_tier health")
+        if tier["used"] > tier["capacity"]:
+            fail(f"{path}: host tier over capacity: {tier}")
+        if tier["pinned"] != 0:
+            fail(f"{path}: {tier['pinned']} pinned host entrie(s) survived "
+                 f"the drain (leaked preemption carries)")
+    elif swap["swap_outs"] or swap["swap_ins"]:
+        fail(f"{path}: swap activity {swap} with the host tier disabled")
+
     errs: dict = {}
     for o in rep["requests"]:
         if o["error_kind"]:
@@ -117,7 +147,11 @@ def check_report(path: str) -> None:
         f"seed={rep['chaos_seed']}, rate={rep['chaos_rate']}: "
         f"{len(rep['requests'])} finished / {rep['ticks']} ticks, "
         f"{faults['total']} faults {faults['by_site']}, errors {errs or '{}'}, "
-        f"pages by kind {kinds}, 0 leaks, audit clean)"
+        f"pages by kind {kinds}, 0 leaks, audit clean"
+        + (f", swap {swap['swap_outs']}out/{swap['swap_ins']}in "
+           f"[{swap['verified_swapins']}ok+{swap['corrupt_swapins']}corrupt]"
+           if rep.get("host_tier") else "")
+        + ")"
     )
 
 

@@ -26,6 +26,9 @@ REQUIRED_COUNTERS = (
     # robustness layer (docs/ROBUSTNESS.md)
     "quarantined", "shed", "expired", "cancelled",
     "audit_failures", "degraded_ticks",
+    # host-RAM swap tier (zeros when the tier is disabled)
+    "swap_outs", "swap_ins", "verified_swapins", "corrupt_swapins",
+    "swap_bytes",
 )
 REQUIRED_GAUGES = (
     "pool_pages_used", "pool_pages_free", "pool_peak_pages",
@@ -35,6 +38,8 @@ REQUIRED_GAUGES = (
     # heterogeneous kinds (kv block-table pages, state checkpoints,
     # read-only shared encoder pages)
     "pool_pages_kv", "pool_pages_state", "pool_pages_shared_ro",
+    # host-RAM swap tier occupancy (zeros when disabled)
+    "host_pages_used", "host_pages_capacity",
 )
 # name → exact bucket edges (mirrors repro.serving.telemetry — kept
 # literal here so the checker stands alone)
@@ -79,6 +84,16 @@ def check_metrics(path: str) -> None:
     if sum(kinds.values()) != snap["gauges"]["pool_pages_used"]:
         fail(f"{path}: per-kind pages {kinds} do not sum to "
              f"pool_pages_used={snap['gauges']['pool_pages_used']}")
+    # host-tier swap accounting: every swap-in either verified or
+    # quarantined, and occupancy never exceeds the configured bound
+    c = snap["counters"]
+    if c["swap_ins"] != c["verified_swapins"] + c["corrupt_swapins"]:
+        fail(f"{path}: swap_ins={c['swap_ins']} != verified "
+             f"{c['verified_swapins']} + corrupt {c['corrupt_swapins']}")
+    g = snap["gauges"]
+    if g["host_pages_used"] > g["host_pages_capacity"]:
+        fail(f"{path}: host_pages_used={g['host_pages_used']} exceeds "
+             f"host_pages_capacity={g['host_pages_capacity']}")
     for name, edges in REQUIRED_HISTOGRAMS.items():
         h = snap["histograms"].get(name)
         if h is None:
